@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timed jit loops + CSV emission.
+
+Measured numbers on this container are *CPU-emulation* latencies of the
+batched phase engine: they validate the cost model's ORDERING claims
+(its real claim, paper §IV) and calibrate its parameters; the absolute
+Cray-Aries microseconds of Table I are reproduced through the model's
+CORI_PHASE1 constants.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+
+
+def time_op(fn: Callable, *args, iters: int = 20, warmup: int = 3,
+            ops_per_call: int = 1) -> float:
+    """Median wall time per logical op, in microseconds."""
+    fn_j = jax.jit(fn) if not hasattr(fn, "lower") else fn
+    out = fn_j(*args)
+    jax.block_until_ready(out)
+    for _ in range(warmup - 1):
+        jax.block_until_ready(fn_j(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_j(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    med = times[len(times) // 2]
+    return med / ops_per_call * 1e6
+
+
+class Csv:
+    def __init__(self, header):
+        self.header = header
+        self.rows = []
+
+    def add(self, *row):
+        self.rows.append(row)
+        print(",".join(str(x) for x in row), flush=True)
+
+    def dump(self, path):
+        import pathlib
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        with open(p, "w") as f:
+            f.write(",".join(self.header) + "\n")
+            for r in self.rows:
+                f.write(",".join(str(x) for x in r) + "\n")
+        return str(p)

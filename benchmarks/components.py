@@ -1,0 +1,130 @@
+"""Paper Fig. 3 / Table I: component-operation latencies.
+
+Measures put, get, FAD (random addresses), FAD-single-variable,
+single CAS, persistent CAS, and the AM round trip on the batched phase
+engine, at several virtual-rank counts. Emits per-op µs and the
+calibrated ComponentCosts used by the queue/hash-table benchmark
+predictions (Figs. 4–5 methodology).
+
+Reproduces the paper's two qualitative findings structurally:
+  * persistent CAS >> single CAS (multiple rounds under contention);
+  * FAD-single-variable > FAD-random: all AMOs funnel into one owner's
+    serialized lane (on Aries the cause was NIC-side; here it is the
+    owner-lane serialization — same shape, different microarchitecture,
+    see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import am as am_mod
+from repro.core import costmodel as cm
+from repro.core import hashtable as ht_mod
+from repro.core import window
+from repro.core.types import AmoKind
+
+from .common import Csv, time_op
+
+LOCAL = 4096
+
+
+def _mk(P, n, seed=0):
+    rng = np.random.default_rng(seed)
+    dst = jnp.asarray(rng.integers(0, P, (P, n)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, LOCAL, (P, n)), jnp.int32)
+    return dst, off
+
+
+def bench_components(P: int = 8, n: int = 64, iters: int = 15):
+    win = window.make_window(P, LOCAL)
+    dst, off = _mk(P, n)
+    ops = P * n
+
+    def put(w):
+        return window.rdma_put(w, dst, off, jnp.ones((P, n, 1), jnp.int32))
+
+    def get(w):
+        return window.rdma_get(w, dst, off, width=1)
+
+    def fad(w):
+        return window.rdma_fao(w, dst, off, 1, AmoKind.FAA)
+
+    zero_off = jnp.zeros_like(off)
+
+    def fad_single(w):
+        return window.rdma_fao(w, dst, zero_off, 1, AmoKind.FAA)
+
+    def cas(w):
+        return window.rdma_cas(w, dst, off, 0, 1)
+
+    def cas_persistent(w):
+        # poll until success: swap cur -> cur+1, retry on conflict
+        def round_(i, carry):
+            w, pending, cur = carry
+            old, w = window.rdma_cas(w, dst, zero_off, cur, cur + 1,
+                                     valid=pending)
+            done = pending & (old == cur)
+            return w, pending & ~done, old
+        cur = window.rdma_get(w, dst, zero_off, width=1)[..., 0]
+        w, pending, _ = jax.lax.fori_loop(
+            0, 8, round_, (w, jnp.ones((P, n), bool), cur))
+        return w
+
+    # AM round trip: the inner operation is a remote hash-table insert
+    # (matches the paper's AM benchmark).
+    ht = ht_mod.make_hashtable(P, LOCAL, 1)
+    eng = am_mod.AMEngine(P)
+    ht_mod.build_am_handlers(ht, eng)
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.integers(1, 1 << 20, (P, n)), jnp.int32)
+
+    def am_rt(table):
+        ht2 = ht_mod.DHashTable(win=window.Window(data=table),
+                                nslots=LOCAL, val_words=1)
+        ht3, ok = ht_mod.insert_rpc(ht2, eng, keys, keys[..., None])
+        return ht3.win.data
+
+    rows = {}
+    rows["put"] = time_op(put, win, iters=iters, ops_per_call=ops)
+    rows["get"] = time_op(get, win, iters=iters, ops_per_call=ops)
+    rows["fad"] = time_op(fad, win, iters=iters, ops_per_call=ops)
+    rows["fad_single"] = time_op(fad_single, win, iters=iters,
+                                 ops_per_call=ops)
+    rows["cas_single"] = time_op(cas, win, iters=iters, ops_per_call=ops)
+    rows["cas_persistent"] = time_op(cas_persistent, win, iters=iters,
+                                     ops_per_call=ops)
+    rows["am_rt"] = time_op(am_rt, ht.win.data, iters=iters,
+                            ops_per_call=ops)
+    return rows
+
+
+def calibrated_costs(rows) -> cm.ComponentCosts:
+    return cm.calibrate({
+        "W": rows["put"], "R": rows["get"], "A_cas": rows["cas_single"],
+        "A_fao": rows["fad"], "am_rt": rows["am_rt"],
+        "handler": 0.0,
+    })
+
+
+def main(out="artifacts/bench"):
+    csv = Csv(["benchmark", "nranks", "op", "us_per_op"])
+    all_rows = {}
+    for P in (2, 4, 8, 16):
+        rows = bench_components(P=P)
+        all_rows[P] = rows
+        for op, us in rows.items():
+            csv.add("components(fig3)", P, op, f"{us:.3f}")
+    csv.dump(f"{out}/components.csv")
+    # structural findings (paper Fig. 3)
+    r = all_rows[8]
+    print(f"# persistent_cas/single_cas = "
+          f"{r['cas_persistent']/r['cas_single']:.2f} (expect > 1)")
+    print(f"# fad_single/fad = {r['fad_single']/r['fad']:.2f} "
+          f"(expect >= 1; Aries pathology analogue)")
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

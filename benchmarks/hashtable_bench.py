@@ -1,0 +1,113 @@
+"""Paper Fig. 5: hash-table operation latencies — RDMA find C_R / C_RW,
+AM insert/find, RDMA insert C_RW / C_W — measured vs model prediction."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import am as am_mod
+from repro.core import costmodel as cm
+from repro.core import hashtable as ht_mod
+from repro.core import window
+from repro.core.types import Backend, Promise
+
+from . import components
+from .common import Csv, time_op
+
+NSLOTS = 8192
+
+
+def bench_hashtable(P: int = 8, n: int = 32, iters: int = 15):
+    ops = P * n
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(
+        rng.permutation(1 << 20)[:ops].reshape(P, n) + 1, jnp.int32)
+    vals = jnp.stack([keys, keys], axis=-1)
+    base = ht_mod.make_hashtable(P, NSLOTS, 2)
+    eng = am_mod.AMEngine(P)
+    ht_mod.build_am_handlers(base, eng)
+    filled, ok, _ = ht_mod.insert_rdma(base, keys, vals, promise=Promise.CW)
+    assert bool(ok.all())
+
+    def wrap(data):
+        return ht_mod.DHashTable(win=window.Window(data=data),
+                                 nslots=NSLOTS, val_words=2)
+
+    def insert_crw(data):
+        ht, _, _ = ht_mod.insert_rdma(wrap(data), keys, vals,
+                                      promise=Promise.CRW, max_probes=4)
+        return ht.win.data
+
+    def insert_cw(data):
+        ht, _, _ = ht_mod.insert_rdma(wrap(data), keys, vals,
+                                      promise=Promise.CW, max_probes=4)
+        return ht.win.data
+
+    def insert_am(data):
+        ht, _ = ht_mod.insert_rpc(wrap(data), eng, keys, vals)
+        return ht.win.data
+
+    def find_cr(data):
+        ht, f, v = ht_mod.find_rdma(wrap(data), keys, promise=Promise.CR,
+                                    max_probes=4)
+        return f, v
+
+    def find_crw(data):
+        ht, f, v = ht_mod.find_rdma(wrap(data), keys, promise=Promise.CRW,
+                                    max_probes=4)
+        return ht.win.data, f, v
+
+    def find_am(data):
+        return ht_mod.find_rpc(wrap(data), eng, keys)
+
+    empty = base.win.data
+    full = filled.win.data
+    return {
+        "rdma_find_cr": time_op(find_cr, full, iters=iters,
+                                ops_per_call=ops),
+        "am_find_crw": time_op(find_am, full, iters=iters,
+                               ops_per_call=ops),
+        "am_insert_crw": time_op(insert_am, empty, iters=iters,
+                                 ops_per_call=ops),
+        "rdma_find_crw": time_op(find_crw, full, iters=iters,
+                                 ops_per_call=ops),
+        "rdma_insert_crw": time_op(insert_crw, empty, iters=iters,
+                                   ops_per_call=ops),
+        "rdma_insert_cw": time_op(insert_cw, empty, iters=iters,
+                                  ops_per_call=ops),
+    }
+
+
+PRED = {
+    "rdma_find_cr": (cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA),
+    "rdma_find_crw": (cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA),
+    "am_find_crw": (cm.DSOp.HT_FIND, Promise.CRW, Backend.RPC),
+    "am_insert_crw": (cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC),
+    "rdma_insert_crw": (cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA),
+    "rdma_insert_cw": (cm.DSOp.HT_INSERT, Promise.CW, Backend.RDMA),
+}
+
+
+def main(out="artifacts/bench"):
+    csv = Csv(["benchmark", "nranks", "impl", "measured_us",
+               "predicted_us"])
+    comp = components.bench_components(P=8)
+    params = components.calibrated_costs(comp)
+    for P in (2, 4, 8):
+        rows = bench_hashtable(P=P)
+        preds = {impl: cm.predict(*PRED[impl], params=params)
+                 for impl in rows}
+        for impl, us in rows.items():
+            csv.add("hashtable(fig5)", P, impl, f"{us:.3f}",
+                    f"{preds[impl]:.3f}")
+        m_order = sorted(rows, key=rows.get)
+        p_order = sorted(preds, key=preds.get)
+        agree = sum(a == b for a, b in zip(m_order, p_order))
+        print(f"# P={P} order agreement {agree}/{len(m_order)}: "
+              f"measured {m_order}")
+    csv.dump(f"{out}/hashtable.csv")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

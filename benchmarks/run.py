@@ -1,0 +1,32 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+report. Prints CSV; artifacts land in artifacts/bench/."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (attentiveness, components, hashtable_bench, queue_bench,
+                   roofline)
+    sections = [
+        ("components (paper Fig. 3 / Table I)", components.main),
+        ("queue push (paper Fig. 4)", queue_bench.main),
+        ("hash table (paper Fig. 5)", hashtable_bench.main),
+        ("attentiveness (paper Fig. 6)", attentiveness.main),
+        ("roofline (assignment §Roofline)", roofline.main),
+    ]
+    failures = 0
+    for title, fn in sections:
+        print(f"\n=== {title} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""The paper's am-comp benchmark suite (BCL examples/benchmarks/am-comp),
+reduced sizes: component latencies, queue pushes, hash-table ops,
+attentiveness — measured on the phase engine vs the analytical model.
+
+  PYTHONPATH=src python examples/am_comp.py
+"""
+from benchmarks import attentiveness, components, hashtable_bench, queue_bench
+
+print("=== components (Fig. 3) ===")
+rows = components.bench_components(P=4, n=32, iters=5)
+for op, us in rows.items():
+    print(f"  {op:16s} {us:8.2f} us/op")
+
+print("=== queue push (Fig. 4) ===")
+q = queue_bench.bench_queue(P=4, n=16, iters=5)
+for impl, us in q.items():
+    print(f"  {impl:24s} {us:8.2f} us/op")
+
+print("=== hash table (Fig. 5) ===")
+h = hashtable_bench.bench_hashtable(P=4, n=16, iters=5)
+for impl, us in h.items():
+    print(f"  {impl:18s} {us:8.2f} us/op")
+
+print("=== attentiveness (Fig. 6) ===")
+for busy, med in attentiveness.bench_attentiveness(
+        P=2, n=8, rounds=8, busy_list=(0, 4, 16)):
+    print(f"  busy={busy:3d}us  am={med['am']:7.2f}  "
+          f"am_pt={med['am_pt']:7.2f}  rdma={med['rdma']:7.2f}")

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's two data structures under both implementation
+styles, plus the cost model choosing between them.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import am, costmodel as cm, hashtable as ht, queue as dq
+from repro.core.types import Backend, OpStats, Promise
+
+P = 8  # virtual ranks
+
+# --- distributed hash table ------------------------------------------------
+table = ht.make_hashtable(P, nslots=128, val_words=1)
+keys = jnp.arange(P * 4, dtype=jnp.int32).reshape(P, 4) + 1
+vals = (keys * 10)[..., None]
+
+# RDMA style: CAS (claim) + PUT (write) + FAO (publish) — 3 network phases
+table, ok, probes = ht.insert_rdma(table, keys, vals, promise=Promise.CRW)
+print(f"[rdma] fully-atomic insert: ok={bool(ok.all())} "
+      f"max_probes={int(probes.max())} (cost model: "
+      f"{cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA):.1f} us "
+      f"on Cori Aries)")
+
+# RPC style: one active-message round trip, probing runs in the handler
+engine = am.AMEngine(P)
+table2 = ht.make_hashtable(P, nslots=128, val_words=1)
+ht.build_am_handlers(table2, engine)
+table2, ok2 = ht.insert_rpc(table2, engine, keys, vals)
+found, got = ht.find_rpc(table2, engine, keys)
+print(f"[rpc ] insert+find: ok={bool(ok2.all() and found.all())} "
+      f"(cost model: {cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC):.1f} us)")
+
+# --- hosted queue ------------------------------------------------------------
+q = dq.make_queue(P, host=0, capacity=256, val_words=1)
+q, okq = dq.push_rdma(q, keys[..., None], promise=Promise.CW)
+q, gotq, outq = dq.pop_rdma(q, 4, promise=Promise.CR)
+print(f"[rdma] phasal queue push/pop: pushed={int(okq.sum())} "
+      f"popped={int(gotq.sum())}")
+
+# --- the paper's punchline: the model picks the winner per workload ---------
+for busy in (0.0, 1.0, 4.0, 16.0):
+    b = cm.choose_backend(cm.DSOp.HT_INSERT, Promise.CRW,
+                          OpStats(target_busy_us=busy))
+    print(f"[model] insert with target busy {busy:4.1f}us -> {b.value}")
+
+# MoE dispatch as a data-structure op (DESIGN.md §3): ship tokens (RPC)
+# vs pull expert weights (RDMA)
+for tokens in (64, 4096, 262144):
+    b = cm.choose_moe_backend(tokens_per_rank=tokens, d_model=2048,
+                              expert_bytes_per_rank=3 * 64 * 2048 * 1408 * 2)
+    print(f"[model] MoE dispatch at {tokens:7d} tokens/rank -> {b.value}")

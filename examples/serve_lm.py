@@ -1,0 +1,11 @@
+"""Serving example: batched greedy decoding with ring-buffer / recurrent
+caches across three architecture families.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve
+
+for arch in ("smollm-135m", "recurrentgemma-9b", "xlstm-1.3b"):
+    print(f"\n--- {arch} (reduced) ---")
+    serve.main(["--arch", arch, "--reduced", "--batch", "2",
+                "--prompt-len", "6", "--gen-len", "10"])

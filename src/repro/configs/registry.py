@@ -1,0 +1,123 @@
+"""Architecture registry + input_specs(): ShapeDtypeStruct stand-ins for
+every model input, per (arch × shape) cell — the dry-run's only data source
+(weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import (arctic_480b, deepseek_coder_33b, deepseek_moe_16b,
+               granite_3_8b, internlm2_20b, llava_next_34b,
+               recurrentgemma_9b, smollm_135m, whisper_base, xlstm_1_3b)
+from .base import ArchConfig, ShapeSpec
+
+ARCHS: Dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG for m in (
+        granite_3_8b, internlm2_20b, smollm_135m, deepseek_coder_33b,
+        whisper_base, deepseek_moe_16b, arctic_480b, recurrentgemma_9b,
+        xlstm_1_3b, llava_next_34b)
+}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def get_shape(cfg: ArchConfig, shape_name: str) -> ShapeSpec:
+    for s in cfg.shapes:
+        if s.name == shape_name:
+            return s
+    raise KeyError(f"{cfg.name} has no shape {shape_name!r} "
+                   f"(skip list: {cfg.skip_shapes})")
+
+
+def runnable_cells():
+    """All (arch, shape) pairs that are defined and not rule-skipped."""
+    out = []
+    for name in list_archs():
+        cfg = ARCHS[name]
+        for s in cfg.shapes:
+            if s.name not in cfg.skip_shapes:
+                out.append((name, s.name))
+    return out
+
+
+def skipped_cells():
+    out = []
+    for name in list_archs():
+        cfg = ARCHS[name]
+        for s in cfg.skip_shapes:
+            out.append((name, s))
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                dtype=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for the step function of this cell.
+
+    train:   tokens (accum, mb, S) [+ frames / patch_embeds stubs]
+    prefill: tokens (B, S) [+ stubs]
+    decode:  tokens (B,)  (the decode state comes from decode_state_specs)
+    """
+    dt = dtype or cfg.compute_dtype
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+
+    def tok(*s):
+        return jax.ShapeDtypeStruct(s, jnp.int32)
+
+    if shape.kind == "train":
+        A = shape.grad_accum
+        assert B % A == 0, (cfg.name, shape)
+        mb = B // A
+        specs = {"tokens": tok(A, mb, S)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((A, mb, S, cfg.d_model),
+                                                   dt)
+        if cfg.family == "vlm":
+            st = S - cfg.n_patch_tokens
+            assert st > 0
+            specs["tokens"] = tok(A, mb, st)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (A, mb, cfg.n_patch_tokens, cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": tok(B, S)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            st = S - cfg.n_patch_tokens
+            specs["tokens"] = tok(B, st)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patch_tokens, cfg.d_model), dt)
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": tok(B)}
+    raise ValueError(shape.kind)
+
+
+def decode_state_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract decode state (KV caches / recurrent states) via eval_shape —
+    no allocation."""
+    from ..models import lm
+
+    def mk():
+        return lm.init_decode_state(cfg, shape.global_batch, shape.seq_len)
+
+    return jax.eval_shape(mk)
+
+
+def params_specs(cfg: ArchConfig):
+    """Abstract parameters via eval_shape — no allocation."""
+    from ..models import lm
+
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,12 @@
+# The paper's primary contribution: PGAS distributed data structures with
+# selectable RDMA / RPC backends + the analytical cost model that picks
+# between them. See DESIGN.md §2 for the TPU-native translation.
+from . import am, costmodel, hashtable, queue, routing, types, window
+from .types import AmoKind, Backend, OpStats, Promise
+from .window import Window, make_window, rdma_cas, rdma_fao, rdma_get, rdma_put
+
+__all__ = [
+    "am", "costmodel", "hashtable", "queue", "routing", "types", "window",
+    "AmoKind", "Backend", "OpStats", "Promise",
+    "Window", "make_window", "rdma_cas", "rdma_fao", "rdma_get", "rdma_put",
+]

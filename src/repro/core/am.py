@@ -1,0 +1,107 @@
+"""Active-message (RPC) engine: aggregated request routing + local handlers.
+
+The TPU-native realization of GASNet-EX style active messages (DESIGN.md §2):
+
+- `dispatch` = ONE request exchange + arbitrary shard-local handler + ONE
+  reply exchange. The number of network phases is *independent of the
+  handler's control flow* — the paper's central RPC property.
+- Handlers obey the paper's AM restrictions by construction: they are pure
+  shard-local JAX functions, so they cannot send further messages or touch
+  the network.
+- Attentiveness: an owner services requests only when its SPMD program
+  reaches a dispatch point. The latency penalty of infrequent dispatch
+  points is modeled in `costmodel.attentiveness_delay` and measured by the
+  Fig. 6 benchmark; the engine itself is oblivious (as is GASNet's API).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import routing
+
+Array = jax.Array
+
+# handler(state_row, payload (m, W) int32, mask (m,)) -> (state_row', reply (m, RW) int32)
+HandlerFn = Callable[[Any, Array, Array], Tuple[Any, Array]]
+
+
+@dataclass(frozen=True)
+class Handler:
+    """A registered active-message handler (paper Fig. 2's insert_handler).
+
+    `batched_fn`, when provided, processes all owners' request grids at once
+    — signature (state (P,...), payload (P,m,W), mask (P,m)) -> (state',
+    replies (P,m,RW)) — and is the hook through which Pallas handler
+    kernels (kernels/hash_probe.py) replace the vmapped per-row path.
+    """
+
+    name: str
+    fn: HandlerFn
+    reply_width: int  # int32 words returned per op (0 => no-reply AM)
+    batched_fn: Optional[Callable[[Any, Array, Array],
+                                  Tuple[Any, Array]]] = None
+
+
+class AMEngine:
+    """Handler registry + dispatch. One engine per distributed structure."""
+
+    def __init__(self, nranks: int):
+        self.nranks = nranks
+        self._handlers: dict[str, Handler] = {}
+
+    def register(self, name: str, fn: HandlerFn, reply_width: int,
+                 batched_fn=None) -> Handler:
+        if name in self._handlers:
+            raise ValueError(f"handler {name!r} already registered")
+        h = Handler(name=name, fn=fn, reply_width=reply_width,
+                    batched_fn=batched_fn)
+        self._handlers[name] = h
+        return h
+
+    def handler(self, name: str) -> Handler:
+        return self._handlers[name]
+
+    def dispatch(self, handler: Handler, state: Any, dst: Array,
+                 payload: Array, valid: Optional[Array] = None,
+                 cap: Optional[int] = None
+                 ) -> Tuple[Any, Array, Array]:
+        """Issue one aggregated AM phase for a batch of requests.
+
+        state:   pytree whose leaves have leading axis P (owner rows)
+        dst:     (P, n) target ranks
+        payload: (P, n, W) int32 request words
+        returns (state', replies (P, n, RW), delivered (P, n)).
+
+        Exactly two network phases regardless of handler complexity; for
+        reply_width == 0 a single phase (the origin-side completion counter
+        is derivable locally from `delivered`, matching the paper's
+        counter-increment reply elision).
+        """
+        cap = dst.shape[1] if cap is None else cap
+        routed = routing.route(dst, payload, cap, valid, role="am_req")
+        flat, mask = routing.flatten_owner_view(routed)
+
+        if handler.batched_fn is not None:
+            state2, reply_flat = handler.batched_fn(state, flat, mask)
+        else:
+            state2, reply_flat = jax.vmap(handler.fn)(state, flat, mask)
+        if handler.reply_width == 0:
+            replies = jnp.zeros(dst.shape + (0,), dtype=jnp.int32)
+            return state2, replies, routed.op_ok
+        replies_o = routing.unflatten_owner_view(reply_flat, self.nranks, cap)
+        replies = routing.route_replies(routed, replies_o, dst, role="am_rep")
+        return state2, replies, routed.op_ok
+
+    def dispatch_local(self, handler: Handler, state: Any, payload: Array,
+                       valid: Optional[Array] = None
+                       ) -> Tuple[Any, Array]:
+        """Run the handler against the caller's own shard (C_l level):
+        zero network phases, used by hosted structures when origin == owner
+        and by tests."""
+        if valid is None:
+            valid = jnp.ones(payload.shape[:-1], dtype=bool)
+        return jax.vmap(handler.fn)(state, payload, valid)

@@ -1,0 +1,323 @@
+"""Distributed hash table (open addressing, linear probing) — paper §III-B1.
+
+Slot layout (int32 words):   [ flag | key | val_0 .. val_{vw-1} ]
+
+flag word: low 8 bits = state (EMPTY/RESERVED/READY); bits 8+ = reader count
+(the paper uses fetch-and-OR read *bits*; an additive reader count has the
+same component cost — one A_FAO — without a static reader limit).
+
+Implementations and their best-case costs (paper Table II):
+
+  insert C_RW (rdma):  probes×A_CAS + W + A_FAO   (claim, write, mark-ready)
+  insert C_W  (rdma):  probes×A_CAS + W            (barrier supplies the fence)
+  find   C_RW (rdma):  A_FAO + R + A_FAO           (read-lock, get, unlock)
+  find   C_R  (rdma):  R                           (bare get of the record)
+  insert/find (rpc):   one AM round trip + local probe handler
+
+Ownership: owner = mix(key) % P; probing wraps within the owner's local
+table so the RDMA and RPC backends have identical placement semantics.
+
+RPC expressivity note (paper §II-B): the RPC insert handler does
+insert-or-assign (update on key match) — free extra control flow in a
+handler; the RDMA version is insert-only because CAS can only claim EMPTY
+slots. This asymmetry is the paper's expressivity argument made concrete.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import am as am_mod
+from . import window as win_mod
+from .types import (FLAG_EMPTY, FLAG_READY, FLAG_RESERVED, READ_UNIT,
+                    STATE_MASK, Backend, Promise)
+from .window import Window, rdma_cas, rdma_fao, rdma_get, rdma_put
+
+Array = jax.Array
+
+
+def hash_mix(key: Array) -> Array:
+    """Deterministic 32-bit integer mix (xorshift-multiply)."""
+    k = key.astype(jnp.uint32)
+    k = (k ^ (k >> 16)) * jnp.uint32(0x85EBCA6B)
+    k = (k ^ (k >> 13)) * jnp.uint32(0xC2B2AE35)
+    return (k ^ (k >> 16)).astype(jnp.uint32)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["win"], meta_fields=["nslots", "val_words"])
+@dataclass
+class DHashTable:
+    win: Window
+    nslots: int      # local slots per rank
+    val_words: int
+
+    @property
+    def nranks(self) -> int:
+        return self.win.nranks
+
+    @property
+    def rec_w(self) -> int:
+        return 2 + self.val_words
+
+
+def make_hashtable(nranks: int, nslots: int, val_words: int) -> DHashTable:
+    rec_w = 2 + val_words
+    return DHashTable(win=win_mod.make_window(nranks, nslots * rec_w),
+                      nslots=nslots, val_words=val_words)
+
+
+def _place(ht: DHashTable, keys: Array) -> Tuple[Array, Array]:
+    h = hash_mix(keys)
+    owner = (h % jnp.uint32(ht.nranks)).astype(jnp.int32)
+    start = ((h // jnp.uint32(ht.nranks)) % jnp.uint32(ht.nslots)).astype(
+        jnp.int32)
+    return owner, start
+
+
+# ---------------------------------------------------------------------------
+# RDMA backend
+# ---------------------------------------------------------------------------
+def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
+                promise: Promise = Promise.CRW,
+                valid: Optional[Array] = None, max_probes: int = 8
+                ) -> Tuple[DHashTable, Array, Array]:
+    """Batched insert. keys (P, n) int32, vals (P, n, vw) int32.
+
+    Returns (table', success (P,n), probe_count (P,n)). Distinct keys per
+    batch assumed (open-addressing insert-only, see module docstring).
+    """
+    assert promise in (Promise.CRW, Promise.CW)
+    if valid is None:
+        valid = jnp.ones(keys.shape, dtype=bool)
+    dst, start = _place(ht, keys)
+    rec_w, nslots = ht.rec_w, ht.nslots
+    claim_to = FLAG_RESERVED if promise == Promise.CRW else FLAG_READY
+
+    def probe_phase(j, carry):
+        win, active, claimed, probes = carry
+        slot = (start + j) % nslots
+        off = slot * rec_w
+        old, win = rdma_cas(win, dst, off, FLAG_EMPTY, claim_to, valid=active)
+        newly = active & (old == FLAG_EMPTY)
+        claimed = jnp.where(newly, slot, claimed)
+        probes = probes + active.astype(jnp.int32)
+        return win, active & ~newly, claimed, probes
+
+    claimed0 = jnp.full(keys.shape, -1, dtype=jnp.int32)
+    probes0 = jnp.zeros(keys.shape, dtype=jnp.int32)
+    win, active, claimed, probes = jax.lax.fori_loop(
+        0, max_probes, probe_phase, (ht.win, valid, claimed0, probes0))
+    success = valid & ~active
+
+    # ONE put phase writes [key | val words] for every claimed op.
+    payload = jnp.concatenate([keys[..., None], vals], axis=-1)
+    win = rdma_put(win, dst, claimed * rec_w + 1, payload, valid=success)
+
+    if promise == Promise.CRW:
+        # Flip RESERVED -> READY without touching reader bits: FXOR(1^2).
+        flip = jnp.full(keys.shape, int(FLAG_RESERVED ^ FLAG_READY),
+                        dtype=jnp.int32)
+        _, win = rdma_fao(win, dst, claimed * rec_w, flip,
+                          win_mod.AmoKind.FXOR, valid=success)
+    return (DHashTable(win=win, nslots=nslots, val_words=ht.val_words),
+            success, probes)
+
+
+def find_rdma(ht: DHashTable, keys: Array,
+              promise: Promise = Promise.CR,
+              valid: Optional[Array] = None, max_probes: int = 8
+              ) -> Tuple[DHashTable, Array, Array]:
+    """Batched find. Returns (table', found (P,n), vals (P,n,vw)).
+
+    C_R : one bare get per probe (flag+key+val in a single R).
+    C_RW: read-lock (FAA +unit), get, unlock (FAA -unit) per probe.
+    """
+    assert promise in (Promise.CRW, Promise.CR)
+    if valid is None:
+        valid = jnp.ones(keys.shape, dtype=bool)
+    dst, start = _place(ht, keys)
+    rec_w, nslots, vw = ht.rec_w, ht.nslots, ht.val_words
+
+    def probe_phase(j, carry):
+        win, active, found, out = carry
+        slot = (start + j) % nslots
+        off = slot * rec_w
+        if promise == Promise.CRW:
+            unit = jnp.full(keys.shape, int(READ_UNIT), dtype=jnp.int32)
+            old, win = rdma_fao(win, dst, off, unit, win_mod.AmoKind.FAA,
+                                valid=active)
+            state = old & STATE_MASK
+            lockable = active & (state == FLAG_READY)
+            rec = rdma_get(win, dst, off, rec_w, valid=lockable)
+            _, win = rdma_fao(win, dst, off, -unit, win_mod.AmoKind.FAA,
+                              valid=active)
+            flag_state = state
+        else:
+            rec = rdma_get(win, dst, off, rec_w, valid=active)
+            flag_state = rec[..., 0] & STATE_MASK
+        hit = active & (flag_state == FLAG_READY) & (rec[..., 1] == keys)
+        miss_end = active & (flag_state == FLAG_EMPTY)
+        out = jnp.where(hit[..., None], rec[..., 2:2 + vw], out)
+        found = found | hit
+        active = active & ~(hit | miss_end)
+        return win, active, found, out
+
+    found0 = jnp.zeros(keys.shape, dtype=bool)
+    out0 = jnp.zeros(keys.shape + (vw,), dtype=jnp.int32)
+    win, _, found, out = jax.lax.fori_loop(
+        0, max_probes, probe_phase, (ht.win, valid, found0, out0))
+    return (DHashTable(win=win, nslots=nslots, val_words=ht.val_words),
+            found, out)
+
+
+# ---------------------------------------------------------------------------
+# RPC backend (active messages, paper Fig. 2)
+# ---------------------------------------------------------------------------
+def _probe_local(local: Array, key: Array, nslots: int, rec_w: int,
+                 start: Array, max_probes: int, want_empty: bool):
+    """Shared probe loop over a local shard. Returns (slot, kind) where kind
+    0=miss, 1=found key, 2=empty slot (insertable if want_empty)."""
+
+    def body(j, carry):
+        slot, kind = carry
+        s = (start + j) % nslots
+        rec0 = jax.lax.dynamic_slice(local, (s * rec_w,), (2,))
+        state = rec0[0] & STATE_MASK
+        is_hit = (state == FLAG_READY) & (rec0[1] == key)
+        is_empty = state == FLAG_EMPTY
+        take_hit = (kind == 0) & is_hit
+        take_empty = (kind == 0) & is_empty & want_empty
+        stop_empty = (kind == 0) & is_empty & (not want_empty)
+        kind = jnp.where(take_hit, 1, kind)
+        kind = jnp.where(take_empty | stop_empty, jnp.where(take_empty, 2, 3),
+                         kind)
+        slot = jnp.where(take_hit | take_empty, s, slot)
+        return slot, kind
+
+    slot0 = jnp.int32(-1)
+    kind0 = jnp.int32(0)
+    return jax.lax.fori_loop(0, max_probes, body, (slot0, kind0))
+
+
+def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
+                      max_probes: int = 8):
+    """Register insert/find handlers. Handler state = the local slot words.
+
+    The insert handler runs ops *sequentially* (lax.scan) — the target-side
+    serial execution of AM handlers; arbitrary control flow costs no extra
+    network phases.
+    """
+    nslots, rec_w, vw = ht.nslots, ht.rec_w, ht.val_words
+
+    def insert_fn(local, payload, mask):
+        # payload: (m, 1 + 1 + vw) = [start | key | val...]
+        def one(local, x):
+            pay, ok = x
+            start, key, val = pay[0], pay[1], pay[2:2 + vw]
+            slot, kind = _probe_local(local, key, nslots, rec_w, start,
+                                      max_probes, want_empty=True)
+            can = ok & (kind > 0) & (kind < 3)
+            rec = jnp.concatenate([jnp.array([int(FLAG_READY), 0],
+                                             dtype=jnp.int32), val])
+            rec = rec.at[1].set(key)
+            base = jnp.where(can, slot * rec_w, 0)
+            cur = jax.lax.dynamic_slice(local, (base,), (rec_w,))
+            new = jnp.where(can, rec, cur)
+            local = jax.lax.dynamic_update_slice(local, new, (base,))
+            return local, can.astype(jnp.int32)[None]
+
+        local2, replies = jax.lax.scan(one, local, (payload, mask))
+        return local2, replies
+
+    def find_fn(local, payload, mask):
+        # payload: (m, 2) = [start | key]; reply (m, 1 + vw) = [found | val]
+        def one(pay):
+            start, key = pay[0], pay[1]
+            slot, kind = _probe_local(local, key, nslots, rec_w, start,
+                                      max_probes, want_empty=False)
+            hit = kind == 1
+            base = jnp.where(hit, slot * rec_w, 0)
+            rec = jax.lax.dynamic_slice(local, (base,), (rec_w,))
+            val = jnp.where(hit, rec[2:2 + vw], 0)
+            return jnp.concatenate([hit.astype(jnp.int32)[None], val])
+
+        replies = jax.vmap(one)(payload)
+        replies = jnp.where(mask[:, None], replies, 0)
+        return local, replies
+
+    # Pallas-batched handler bodies (kernels/hash_probe.py): same contract,
+    # table-resident-in-VMEM hot path. Selected via REPRO_USE_PALLAS=1.
+    from ..kernels import ops as kops
+
+    def insert_batched(data, flat, mask):
+        ok, data2 = kops.hash_insert(
+            data, flat[..., 0], flat[..., 1], flat[..., 2:2 + vw], mask,
+            nslots=nslots, rec_w=rec_w, max_probes=max_probes)
+        return data2, ok.astype(jnp.int32)[..., None]
+
+    def find_batched(data, flat, mask):
+        found, vals = kops.hash_find(
+            data, flat[..., 0], flat[..., 1], mask,
+            nslots=nslots, rec_w=rec_w, max_probes=max_probes)
+        reply = jnp.concatenate([found.astype(jnp.int32)[..., None], vals],
+                                axis=-1)
+        return data, reply
+
+    use_batched = kops.use_pallas_default()
+    ins = engine.register("ht_insert", insert_fn, reply_width=1,
+                          batched_fn=insert_batched if use_batched else None)
+    fnd = engine.register("ht_find", find_fn, reply_width=1 + vw,
+                          batched_fn=find_batched if use_batched else None)
+    return ins, fnd
+
+
+def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
+               vals: Array, valid: Optional[Array] = None
+               ) -> Tuple[DHashTable, Array]:
+    """Insert-or-assign via ONE AM round trip (cost: am_rt + handler)."""
+    dst, start = _place(ht, keys)
+    payload = jnp.concatenate([start[..., None], keys[..., None], vals],
+                              axis=-1)
+    h = engine.handler("ht_insert")
+    data, replies, delivered = engine.dispatch(h, ht.win.data, dst, payload,
+                                               valid)
+    ok = delivered & (replies[..., 0] > 0)
+    return (DHashTable(win=Window(data=data), nslots=ht.nslots,
+                       val_words=ht.val_words), ok)
+
+
+def find_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
+             valid: Optional[Array] = None
+             ) -> Tuple[Array, Array]:
+    dst, start = _place(ht, keys)
+    payload = jnp.concatenate([start[..., None], keys[..., None]], axis=-1)
+    h = engine.handler("ht_find")
+    _, replies, delivered = engine.dispatch(h, ht.win.data, dst, payload,
+                                            valid)
+    found = delivered & (replies[..., 0] > 0)
+    return found, replies[..., 1:]
+
+
+# ---------------------------------------------------------------------------
+# Unified front-end
+# ---------------------------------------------------------------------------
+def insert(ht, keys, vals, *, promise=Promise.CRW, backend=Backend.RDMA,
+           engine=None, **kw):
+    if backend == Backend.RPC:
+        ht2, ok = insert_rpc(ht, engine, keys, vals,
+                             valid=kw.get("valid"))
+        return ht2, ok, jnp.ones_like(keys)
+    return insert_rdma(ht, keys, vals, promise=promise, **kw)
+
+
+def find(ht, keys, *, promise=Promise.CR, backend=Backend.RDMA, engine=None,
+         **kw):
+    if backend == Backend.RPC:
+        found, vals = find_rpc(ht, engine, keys, valid=kw.get("valid"))
+        return ht, found, vals
+    return find_rdma(ht, keys, promise=promise, **kw)

@@ -1,0 +1,210 @@
+"""Owner-routing engine: bucket a batch of ops by destination rank and
+exchange the buckets across ranks.
+
+This is the *one network phase* primitive out of which both backends are
+built:
+
+- an RDMA component op (put/get/CAS/FAO) is exactly one routed phase
+  (plus one reply phase when it fetches something), with NO target-side
+  control flow other than the fixed-function AMO apply;
+- an RPC dispatch is one routed request phase, an arbitrary local handler,
+  and one routed reply phase.
+
+Representation: every participant ("virtual rank") owns row `r` of a
+`(P, ...)` array. The leading P axis is mapped onto physical mesh axes by
+the launch layer via `sharding_hint`; on a single CPU device everything is
+local and the exchange is a transpose. When P is sharded over a mesh axis,
+`exchange` lowers to an XLA all-to-all — one per network phase, which is
+what the roofline collective counter sees.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Sharding hook: the launch layer installs a constraint function so that the
+# P axis stays pinned to its mesh axes across phases (forcing all_to_all
+# lowering instead of gather/slice chains). Default is identity (single dev).
+# ---------------------------------------------------------------------------
+_SHARD_HOOK: Callable[[jax.Array, str], jax.Array] = lambda x, role: x
+
+
+def set_sharding_hook(fn: Optional[Callable[[jax.Array, str], jax.Array]]):
+    global _SHARD_HOOK
+    _SHARD_HOOK = fn if fn is not None else (lambda x, role: x)
+
+
+@contextlib.contextmanager
+def sharding_hook(fn):
+    global _SHARD_HOOK
+    prev = _SHARD_HOOK
+    _SHARD_HOOK = fn
+    try:
+        yield
+    finally:
+        _SHARD_HOOK = prev
+
+
+def _hint(x: jax.Array, role: str) -> jax.Array:
+    return _SHARD_HOOK(x, role)
+
+
+# ---------------------------------------------------------------------------
+# Binning: per-origin scatter of ops into per-destination capacity slots.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["buf", "mask", "op_slot", "op_ok", "dropped"],
+                   meta_fields=[])
+@dataclass
+class Binned:
+    """Result of binning one origin's op batch by destination rank.
+
+    buf:      (nranks, cap, W) payload words routed to each destination
+    mask:     (nranks, cap)    slot occupancy
+    op_slot:  (n,)             slot index assigned to each original op
+    op_ok:    (n,)             op was delivered (not dropped by capacity)
+    dropped:  ()               number of ops dropped (capacity overflow)
+    """
+
+    buf: jax.Array
+    mask: jax.Array
+    op_slot: jax.Array
+    op_ok: jax.Array
+    dropped: jax.Array
+
+
+def bin_by_dest(dst: jax.Array, payload: jax.Array, nranks: int, cap: int,
+                valid: Optional[jax.Array] = None) -> Binned:
+    """Bucket `n` ops (single origin) by destination rank.
+
+    dst:     (n,) int32 destination rank per op
+    payload: (n, W) payload words per op (W static)
+    cap:     per-destination slot capacity. cap >= n is always lossless.
+    """
+    n = dst.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+    # Invalid ops route to a sentinel rank (dropped by out-of-bounds scatter).
+    dst_eff = jnp.where(valid, dst, nranks)
+    order = jnp.argsort(dst_eff, stable=True)
+    dst_sorted = dst_eff[order]
+    # Position of each op within its destination group.
+    group_start = jnp.searchsorted(dst_sorted, dst_sorted, side="left")
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - group_start.astype(jnp.int32)
+    payload_sorted = payload[order]
+
+    buf = jnp.zeros((nranks, cap) + payload.shape[1:], dtype=payload.dtype)
+    # mode="drop" silently drops dst==nranks (invalid) and pos>=cap (overflow)
+    buf = buf.at[dst_sorted, pos_sorted].set(payload_sorted, mode="drop")
+    mask = jnp.zeros((nranks, cap), dtype=bool)
+    ok_sorted = (pos_sorted < cap) & (dst_sorted < nranks)
+    mask = mask.at[dst_sorted, pos_sorted].set(ok_sorted, mode="drop")
+
+    # Scatter slot assignments back to original op order.
+    op_slot = jnp.zeros((n,), dtype=jnp.int32).at[order].set(pos_sorted)
+    op_ok = jnp.zeros((n,), dtype=bool).at[order].set(ok_sorted)
+    dropped = jnp.sum(valid) - jnp.sum(ok_sorted & (dst_sorted < nranks))
+    return Binned(buf=buf, mask=mask, op_slot=op_slot, op_ok=op_ok,
+                  dropped=dropped.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Exchange: the network phase. (P_src, P_dst, ...) -> (P_dst, P_src, ...)
+# ---------------------------------------------------------------------------
+def exchange(x: jax.Array, role: str = "exchange") -> jax.Array:
+    """Transpose the (src, dst) leading axes: each rank receives the buckets
+    addressed to it. With the leading axis sharded over the owner mesh axes
+    this lowers to a single all-to-all; on one device it is a transpose.
+    """
+    x = _hint(x, role + "_pre")
+    out = jnp.swapaxes(x, 0, 1)
+    return _hint(out, role + "_post")
+
+
+# ---------------------------------------------------------------------------
+# Full routed phases, vmapped over all P origins.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["at_owner", "mask", "op_slot", "op_ok",
+                                "dropped"],
+                   meta_fields=[])
+@dataclass
+class Routed:
+    """A request batch delivered to owners.
+
+    at_owner: (P_owner, P_src, cap, W) payloads as seen by each owner
+    mask:     (P_owner, P_src, cap)
+    op_slot:  (P_src, n) slot index of each original op
+    op_ok:    (P_src, n)
+    dropped:  (P_src,)
+    """
+
+    at_owner: jax.Array
+    mask: jax.Array
+    op_slot: jax.Array
+    op_ok: jax.Array
+    dropped: jax.Array
+
+
+def route(dst: jax.Array, payload: jax.Array, cap: int,
+          valid: Optional[jax.Array] = None, role: str = "req") -> Routed:
+    """Route op batches from all P origins to their owners (one phase).
+
+    dst:     (P, n) destination ranks
+    payload: (P, n, W) payload words
+    valid:   (P, n) optional mask
+    """
+    nranks = dst.shape[0]
+
+    def one(dst_r, pay_r, val_r):
+        return bin_by_dest(dst_r, pay_r, nranks, cap, val_r)
+
+    if valid is None:
+        valid = jnp.ones(dst.shape, dtype=bool)
+    binned = jax.vmap(one)(dst, payload, valid)
+    at_owner = exchange(binned.buf, role)          # (P_owner, P_src, cap, W)
+    mask = exchange(binned.mask, role + "_mask")   # (P_owner, P_src, cap)
+    return Routed(at_owner=at_owner, mask=mask, op_slot=binned.op_slot,
+                  op_ok=binned.op_ok, dropped=binned.dropped)
+
+
+def route_replies(routed: Routed, replies: jax.Array, dst: jax.Array,
+                  role: str = "rep") -> jax.Array:
+    """Return replies to origins and align them with the original op order.
+
+    replies: (P_owner, P_src, cap, W) — owner-side, aligned with routed.at_owner
+    dst:     (P, n) original destination ranks
+    returns: (P, n, W) reply words per original op (garbage where ~op_ok)
+    """
+    back = exchange(replies, role)                 # (P_origin, P_owner, cap, W)
+
+    def gather_one(back_r, dst_r, slot_r):
+        return back_r[dst_r, slot_r]               # (n, W)
+
+    return jax.vmap(gather_one)(back, dst, routed.op_slot)
+
+
+def flatten_owner_view(routed: Routed):
+    """Flatten an owner's (P_src, cap) request grid into a serialized op list.
+
+    The serialization order (src_rank, slot) is the deterministic order in
+    which the owner's "NIC lane" applies conflicting atomics — the analogue
+    of NIC arrival-order serialization on Aries.
+
+    returns payload (P_owner, m, W), mask (P_owner, m) with m = P_src*cap.
+    """
+    p, s, c = routed.mask.shape
+    flat = routed.at_owner.reshape(p, s * c, *routed.at_owner.shape[3:])
+    mask = routed.mask.reshape(p, s * c)
+    return flat, mask
+
+
+def unflatten_owner_view(flat: jax.Array, p_src: int, cap: int) -> jax.Array:
+    p = flat.shape[0]
+    return flat.reshape(p, p_src, cap, *flat.shape[2:])

@@ -1,0 +1,77 @@
+"""Core types for the PGAS data-structure layer.
+
+Concurrency *promises* (paper §II-C, "concurrency promises"): the caller
+declares which operations may run concurrently with the one being issued,
+which selects the cheapest correct implementation (paper Tables II/III).
+
+AMO opcodes: the fixed-function "NIC" operations available in RDMA style.
+Anything richer must go through the RPC/active-message backend.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+class Promise(enum.Enum):
+    """Concurrency promise levels, paper notation C_RW / C_W / C_R / C_l."""
+
+    CRW = "concurrent_read_write"  # fully atomic
+    CW = "concurrent_write"        # phasal: only writes (inserts/pushes) concurrent
+    CR = "concurrent_read"         # phasal: only reads (finds/pops) concurrent
+    CL = "concurrent_local"        # local-only access (queue is host-local)
+
+
+class Backend(enum.Enum):
+    RDMA = "rdma"   # one-sided component ops (put/get/CAS/FAO phases)
+    RPC = "rpc"     # aggregated active messages (one round trip + handler)
+    AUTO = "auto"   # cost-model-selected
+
+
+class AmoKind(enum.IntEnum):
+    """Fixed-function atomics. Integer codes shared with the Pallas kernel."""
+
+    PUT = 0    # unconditional store, returns previous value
+    GET = 1    # read, no modification
+    CAS = 2    # compare(a)-and-swap(b), returns previous value
+    FAA = 3    # fetch-and-add(a)
+    FOR = 4    # fetch-and-or(a)
+    FAND = 5   # fetch-and-and(a)
+    FXOR = 6   # fetch-and-xor(a)
+
+
+# Hash-table slot flag states (stored in the flag word of each slot).
+FLAG_EMPTY = jnp.int32(0)
+FLAG_RESERVED = jnp.int32(1)
+FLAG_READY = jnp.int32(2)
+# Reader counting for C_RW find: readers add READ_UNIT to the flag word.
+# (The paper uses fetch-and-OR on per-reader bits; a counter has identical
+# cost (one A_FAO) and avoids a static reader limit.)
+READ_UNIT = jnp.int32(256)
+STATE_MASK = jnp.int32(255)
+
+EMPTY_KEY = jnp.int32(-0x7FFFFFFF)  # sentinel for "no key present"
+
+
+def f32_to_words(x: jax.Array) -> jax.Array:
+    """Bitcast float32 payloads into int32 words for word-addressed windows."""
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def words_to_f32(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+@dataclass(frozen=True)
+class OpStats:
+    """Workload statistics fed to the cost model's backend chooser."""
+
+    ops_per_rank: int = 1
+    payload_bytes: int = 8
+    expected_probes: float = 1.0     # hash-table collision factor (round trips)
+    contention: float = 1.0          # expected CAS attempts for persistent CAS
+    target_busy_us: float = 0.0      # interspersed compute between dispatch points
+    progress_thread: bool = False    # dedicated servicing channel (paper Fig. 6 "PT")

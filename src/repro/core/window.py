@@ -1,0 +1,282 @@
+"""PGAS symmetric window + one-sided (RDMA-style) component operations.
+
+A `Window` is the TPU-native analogue of a registered RDMA memory region:
+every rank owns row `r` of a `(P, L)` word array. Component ops are batched
+per step (see DESIGN.md §2) and each op is ONE network phase:
+
+    rdma_put   — 1 exchange  (origin → owner scatter; completion at phase end)
+    rdma_get   — 2 exchanges (request → owner gather → reply)
+    rdma_cas   — 2 exchanges (request → serialized apply → old values back)
+    rdma_fao   — 2 exchanges (FAA / FOR / FAND / FXOR)
+
+Conflicting atomics at an owner are applied in deterministic (src_rank, slot)
+order — the analogue of NIC arrival-order serialization. The vectorized
+appliers below implement that order exactly; `kernels/amo_apply.py` is the
+TPU hot-path implementation of the same contract and `kernels/ref.py` is the
+independently written sequential oracle both are tested against.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import routing
+from .types import AmoKind
+
+Array = jax.Array
+
+
+@functools.partial(jax.tree_util.register_dataclass, data_fields=["data"],
+                   meta_fields=[])
+@dataclass
+class Window:
+    """Symmetric PGAS window: rank r owns data[r]. Word-addressed."""
+
+    data: Array  # (P, L)
+
+    @property
+    def nranks(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def local_size(self) -> int:
+        return self.data.shape[1]
+
+
+def make_window(nranks: int, local_size: int, dtype=jnp.int32,
+                fill=0) -> Window:
+    return Window(data=jnp.full((nranks, local_size), fill, dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# Owner-side appliers (shard-local, vmapped over owners).
+# All take a *serialized* op list: ops earlier in the list happen first.
+# ---------------------------------------------------------------------------
+def _segmented_combine(off_sorted, vals_sorted, init_vals, binop, identity):
+    """Segmented exclusive scan over same-offset groups (sorted by offset).
+
+    Returns (old_per_op_sorted, final_value_per_group_positions, is_last).
+    old_i = init ⊕ (operands of earlier ops at the same offset).
+    """
+    n = off_sorted.shape[0]
+    is_first = jnp.concatenate([jnp.array([True]),
+                                off_sorted[1:] != off_sorted[:-1]])
+    is_last = jnp.concatenate([off_sorted[1:] != off_sorted[:-1],
+                               jnp.array([True])])
+
+    # Segmented inclusive scan via associative_scan on (reset_flag, value).
+    def combine(a, b):
+        a_flag, a_val = a
+        b_flag, b_val = b
+        out_val = jnp.where(b_flag, b_val, binop(a_val, b_val))
+        return a_flag | b_flag, out_val
+
+    _, incl = jax.lax.associative_scan(combine, (is_first, vals_sorted))
+    ident = jnp.full_like(vals_sorted, identity)
+    excl = jnp.where(is_first, ident, jnp.roll(incl, 1))
+    old = binop(init_vals, excl)
+    final = binop(init_vals, incl)
+    return old, final, is_last
+
+
+_FAO_BINOPS = {
+    int(AmoKind.FAA): (lambda a, b: a + b, 0),
+    int(AmoKind.FOR): (lambda a, b: a | b, 0),
+    int(AmoKind.FAND): (lambda a, b: a & b, -1),
+    int(AmoKind.FXOR): (lambda a, b: a ^ b, 0),
+}
+
+
+def apply_fao_local(local: Array, off: Array, operand: Array, mask: Array,
+                    kind: int) -> Tuple[Array, Array]:
+    """Apply a homogeneous batch of fetch-and-op atomics to a local shard.
+
+    local: (L,), off/operand/mask: (m,) in serialized order.
+    Returns (old_per_op, new_local). Masked ops are no-ops returning 0.
+    """
+    L = local.shape[0]
+    binop, identity = _FAO_BINOPS[int(kind)]
+    ident = jnp.asarray(identity, dtype=local.dtype)
+    off_eff = jnp.where(mask, off, L)  # sentinel → dropped by scatter
+    operand_eff = jnp.where(mask, operand, ident)
+    seq = jnp.arange(off.shape[0])
+    order = jnp.lexsort((seq, off_eff))
+    off_s, op_s = off_eff[order], operand_eff[order]
+    init_vals = local.at[off_s].get(mode="fill", fill_value=0)
+    old_s, final_s, is_last = _segmented_combine(off_s, op_s, init_vals,
+                                                 binop, ident)
+    new_local = local.at[jnp.where(is_last, off_s, L)].set(final_s,
+                                                           mode="drop")
+    old = jnp.zeros_like(old_s).at[order].set(old_s)
+    return jnp.where(mask, old, 0), new_local
+
+
+def apply_cas_local(local: Array, off: Array, cmp: Array, new: Array,
+                    mask: Array) -> Tuple[Array, Array]:
+    """Serialized batch of CAS ops against a local shard.
+
+    Exact chained semantics (op k sees the value left by ops <k at the same
+    offset) via a length-m sequential scan — the XLA analogue of the NIC's
+    serialized AMO pipeline. m is small (P*cap); the TPU hot path is the
+    amo_apply Pallas kernel.
+    """
+    L = local.shape[0]
+    m = off.shape[0]
+    off_eff = jnp.where(mask, off, L)
+    seq = jnp.arange(m)
+    order = jnp.lexsort((seq, off_eff))
+    off_s, cmp_s, new_s = off_eff[order], cmp[order], new[order]
+    is_first = jnp.concatenate([jnp.array([True]), off_s[1:] != off_s[:-1]])
+    init_vals = local.at[off_s].get(mode="fill", fill_value=0)
+
+    def step(carry, x):
+        prev_val = carry
+        first, init_v, c, nw = x
+        cur = jnp.where(first, init_v, prev_val)
+        nxt = jnp.where(cur == c, nw, cur)
+        return nxt, (cur, nxt)
+
+    _, (old_s, val_s) = jax.lax.scan(step, jnp.zeros((), local.dtype),
+                                     (is_first, init_vals, cmp_s, new_s))
+    is_last = jnp.concatenate([off_s[1:] != off_s[:-1], jnp.array([True])])
+    new_local = local.at[jnp.where(is_last, off_s, L)].set(val_s, mode="drop")
+    old = jnp.zeros_like(old_s).at[order].set(old_s)
+    return jnp.where(mask, old, 0), new_local
+
+
+def apply_put_local(local: Array, off: Array, vals: Array,
+                    mask: Array) -> Array:
+    """Last-writer-wins vector puts. off addresses word 0 of a V-word row."""
+    L = local.shape[0]
+    m, V = vals.shape
+    off_eff = jnp.where(mask, off, L)
+    seq = jnp.arange(m)
+    order = jnp.lexsort((seq, off_eff))
+    off_s, vals_s = off_eff[order], vals[order]
+    is_last = jnp.concatenate([off_s[1:] != off_s[:-1], jnp.array([True])])
+    row = jnp.where(is_last, off_s, L)[:, None] + jnp.arange(V)[None, :]
+    return local.at[row].set(vals_s, mode="drop")
+
+
+def gather_local(local: Array, off: Array, width: int) -> Array:
+    idx = off[:, None] + jnp.arange(width)[None, :]
+    return local.at[idx].get(mode="fill", fill_value=0)
+
+
+# ---------------------------------------------------------------------------
+# One-sided phases (the public RDMA-style API).
+# ---------------------------------------------------------------------------
+def _default_cap(dst: Array, cap: Optional[int]) -> int:
+    return dst.shape[1] if cap is None else cap
+
+
+def rdma_put(win: Window, dst: Array, off: Array, vals: Array,
+             valid: Optional[Array] = None, cap: Optional[int] = None
+             ) -> Window:
+    """One-sided put: vals (P, n, V) written at word offsets off on rank dst.
+
+    ONE network phase. Completion semantics: remote-complete at phase end
+    (the paper's put is likewise only guaranteed complete at the next flush).
+    """
+    cap = _default_cap(dst, cap)
+    V = vals.shape[-1]
+    payload = jnp.concatenate([off[..., None].astype(jnp.int32),
+                               vals.astype(jnp.int32)], axis=-1)
+    routed = routing.route(dst, payload, cap, valid, role="put")
+    flat, mask = routing.flatten_owner_view(routed)
+    offs, vwords = flat[..., 0], flat[..., 1:1 + V]
+    new_data = jax.vmap(apply_put_local)(win.data, offs, vwords, mask)
+    return Window(data=new_data)
+
+
+def rdma_get(win: Window, dst: Array, off: Array, width: int,
+             valid: Optional[Array] = None, cap: Optional[int] = None
+             ) -> Array:
+    """One-sided get of `width` words: TWO exchanges (request, data back)."""
+    cap = _default_cap(dst, cap)
+    payload = off[..., None].astype(jnp.int32)
+    routed = routing.route(dst, payload, cap, valid, role="get")
+    flat, mask = routing.flatten_owner_view(routed)
+
+    def owner_gather(local, offs, m):
+        vals = gather_local(local, offs, width)
+        return jnp.where(m[:, None], vals, 0)
+
+    vals = jax.vmap(owner_gather)(win.data, flat[..., 0], mask)
+    replies = routing.unflatten_owner_view(vals, win.nranks, cap)
+    out = routing.route_replies(routed, replies, dst, role="get_rep")
+    return out
+
+
+def _use_kernel_lane() -> bool:
+    """Route the owner-side AMO apply through the Pallas `amo_apply` kernel
+    (the TPU hot path) instead of the vectorized XLA appliers above. Both
+    implement the same serialized contract; tests assert equivalence."""
+    from .. import kernels  # local import: kernels never imports core
+    return kernels.ops.use_pallas_default()
+
+
+def _kernel_amo(data: Array, flat: Array, mask: Array, kind: int,
+                a_col: int, b_col: Optional[int]) -> Tuple[Array, Array]:
+    from ..kernels import ops as kops
+    m = flat.shape[1]
+    zeros = jnp.zeros((data.shape[0], m), jnp.int32)
+    ops_arr = jnp.stack(
+        [flat[..., 0],
+         jnp.full_like(zeros, int(kind)),
+         flat[..., a_col],
+         flat[..., b_col] if b_col is not None else zeros], axis=-1)
+    return kops.amo_apply(data, ops_arr, mask, use_pallas=True)
+
+
+def rdma_fao(win: Window, dst: Array, off: Array, operand: Array,
+             kind: AmoKind, valid: Optional[Array] = None,
+             cap: Optional[int] = None) -> Tuple[Array, Window]:
+    """Fetch-and-op (FAA/FOR/FAND/FXOR): TWO exchanges, serialized apply."""
+    cap = _default_cap(dst, cap)
+    operand = jnp.broadcast_to(jnp.asarray(operand, jnp.int32), off.shape)
+    payload = jnp.stack([off.astype(jnp.int32), operand], axis=-1)
+    routed = routing.route(dst, payload, cap, valid, role="fao")
+    flat, mask = routing.flatten_owner_view(routed)
+
+    def owner_apply(local, p, m):
+        return apply_fao_local(local, p[:, 0], p[:, 1], m, int(kind))
+
+    if _use_kernel_lane():
+        old_flat, new_data = _kernel_amo(win.data, flat, mask, int(kind),
+                                         a_col=1, b_col=None)
+    else:
+        old_flat, new_data = jax.vmap(owner_apply)(win.data, flat, mask)
+    replies = routing.unflatten_owner_view(old_flat[..., None], win.nranks,
+                                           cap)
+    old = routing.route_replies(routed, replies, dst, role="fao_rep")[..., 0]
+    return old, Window(data=new_data)
+
+
+def rdma_cas(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
+             valid: Optional[Array] = None, cap: Optional[int] = None
+             ) -> Tuple[Array, Window]:
+    """Compare-and-swap: TWO exchanges, serialized chained apply."""
+    cap = _default_cap(dst, cap)
+    cmp = jnp.broadcast_to(jnp.asarray(cmp, jnp.int32), off.shape)
+    new = jnp.broadcast_to(jnp.asarray(new, jnp.int32), off.shape)
+    payload = jnp.stack([off.astype(jnp.int32), cmp, new], axis=-1)
+    routed = routing.route(dst, payload, cap, valid, role="cas")
+    flat, mask = routing.flatten_owner_view(routed)
+
+    def owner_apply(local, p, m):
+        return apply_cas_local(local, p[:, 0], p[:, 1], p[:, 2], m)
+
+    if _use_kernel_lane():
+        old_flat, new_data = _kernel_amo(win.data, flat, mask,
+                                         int(AmoKind.CAS), a_col=1, b_col=2)
+    else:
+        old_flat, new_data = jax.vmap(owner_apply)(win.data, flat, mask)
+    replies = routing.unflatten_owner_view(old_flat[..., None], win.nranks,
+                                           cap)
+    old = routing.route_replies(routed, replies, dst, role="cas_rep")[..., 0]
+    return old, Window(data=new_data)

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot spots (DESIGN.md §3), each with a
+# pure-jnp oracle in ref.py and a jit'd dispatcher in ops.py:
+#   amo_apply    — serialized AMO batch at the owner («the NIC lane»)
+#   hash_probe   — open-addressing probe loops («the AM handler body»)
+#   flash_attention / flash_decode — attention hot paths (+ (o,m,l) partials
+#                  for the RPC-style distributed decode)
+#   moe_dispatch — vectorized FAA-ticket position assignment
+#   rg_lru       — gated linear recurrence (recurrentgemma / xLSTM cells)
+from . import ops, ref

@@ -1,0 +1,79 @@
+"""amo_apply — the owner shard's "NIC lane": a serialized batch of atomic
+memory operations applied against a local window shard.
+
+Paper mapping (DESIGN.md §2): on Cray Aries the target NIC serializes
+incoming AMOs against node memory while the CPU computes. TPUs have no NIC
+atomics, so the owner executes the batch itself in deterministic
+(src_rank, slot) order. This kernel IS that serialization point; its cost
+is the `amo_apply` term in the cost model.
+
+Grid: one program per owner row (the P axis); within a program a sequential
+fori_loop walks the op list — atomics are *inherently* serial at the memory
+controller, so the loop order is the semantics, not a perf bug. The local
+window lives in VMEM for the whole batch (one HBM read + one write total),
+which is the TPU-native win over per-op HBM round trips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OP_PUT, OP_GET, OP_CAS, OP_FAA, OP_FOR, OP_FAND, OP_FXOR = range(7)
+
+
+def _amo_kernel(local_ref, ops_ref, mask_ref, old_ref, out_ref):
+    # local_ref: (1, L) VMEM; ops_ref: (1, m, 4); mask_ref: (1, m)
+    out_ref[...] = local_ref[...]
+    m = ops_ref.shape[1]
+
+    def body(j, _):
+        op = ops_ref[0, j]
+        off, code, a, b = op[0], op[1], op[2], op[3]
+        ok = mask_ref[0, j] != 0
+        safe = jnp.where(ok, off, 0)
+        cur = pl.load(out_ref, (0, pl.ds(safe, 1)))[0]
+        new = jnp.select(
+            [code == OP_PUT, code == OP_GET, code == OP_CAS, code == OP_FAA,
+             code == OP_FOR, code == OP_FAND, code == OP_FXOR],
+            [b, cur, jnp.where(cur == a, b, cur), cur + a,
+             cur | a, cur & a, cur ^ a], cur)
+        pl.store(out_ref, (0, pl.ds(safe, 1)),
+                 jnp.where(ok, new, cur)[None])
+        pl.store(old_ref, (0, pl.ds(j, 1)), jnp.where(ok, cur, 0)[None])
+        return 0
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def amo_apply(local: jax.Array, ops: jax.Array, mask: jax.Array,
+              *, interpret: bool = True):
+    """Apply serialized AMO batches to each owner's shard.
+
+    local (P, L) int32; ops (P, m, 4) rows [off|opcode|a|b]; mask (P, m).
+    Returns (old (P, m), local' (P, L)).
+    """
+    P, L = local.shape
+    m = ops.shape[1]
+    old, new_local = pl.pallas_call(
+        _amo_kernel,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, m), jnp.int32),
+            jax.ShapeDtypeStruct((P, L), jnp.int32),
+        ],
+        interpret=interpret,
+    )(local, ops, mask.astype(jnp.int32))
+    return old, new_local

@@ -1,0 +1,113 @@
+"""flash_attention — tiled causal/local-window GQA attention (forward).
+
+TPU-native flash attention: grid (B, H, nq, nk) with the kv axis iterated
+minor-most so the (acc, m, l) running-softmax state lives in VMEM scratch
+across kv steps. Q/K/V tiles are VMEM blocks; the MXU sees (bq, d) x (d, bk)
+and (bq, bk) x (bk, d) matmuls with bq/bk multiples of the 128 MXU edge.
+
+Causality and local windows are handled by masking inside the tile and by
+*skipping whole kv tiles* outside [q_lo - window, q_hi] via @pl.when — the
+same round-trip-elision idea the paper applies to data structures: do not
+pay for phases you can prove you don't need.
+
+GQA: kv head index = q head // (H // Hkv), folded into the BlockSpec index
+map (no repeated KV in HBM — the repeat is free through block indexing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale, causal, window, bq, bk, nk, seq_kv):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+    # Tile-level skip: no work if this kv tile is entirely masked out.
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + bq - 1
+    if window > 0:
+        live &= k_lo + bk - 1 > q_lo - window
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q (B, H, S, d); k/v (B, Hkv, Skv, d) -> (B, H, S, d).
+
+    Queries are aligned to the *end* of the kv sequence (prefill: S == Skv).
+    """
+    B, H, S, d = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bq, bk = min(block_q, S), min(block_k, Skv)
+    nq, nk = pl.cdiv(S, bq), pl.cdiv(Skv, bk)
+    scale = d ** -0.5
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, nk=nk, seq_kv=Skv)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, d), q.dtype),
+        scratch_shapes=[
+            # (bq, d) f32 accumulator + (bq, 1) running max / sum in VMEM
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)[:, :, :S]

@@ -1,0 +1,107 @@
+"""flash_decode — single-token GQA decode attention over a (possibly
+sharded/paged) KV cache, returning flash partials (o, m, l).
+
+This is the kernel half of the paper's RPC-style distributed decode
+(DESIGN.md §3): each KV shard runs this kernel over its *local* cache slice
+and replies with (o, m, l) — constant-size stats instead of the cache
+itself — and the query owner combines them associatively
+(`ref.combine_decode_stats`). The RDMA-style alternative gathers KV pages
+to the query owner and runs the same kernel locally; the cost model picks
+per cache length.
+
+Grid: (B, Hkv, nk) — kv tiles iterated minor-most with running-softmax
+scratch carried across tiles. All q heads of one kv group are processed
+together as a (g, d) block so the MXU contraction is (g, d) x (d, bk).
+Returns *unnormalized* numerator o plus (m, l), so partials combine across
+shards without renormalization error.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, mx_ref, sm_ref, *, scale, bk, nk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mx_ref[...] = jnp.full_like(mx_ref, NEG_INF)
+        sm_ref[...] = jnp.zeros_like(sm_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (g, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (g, bk)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    valid = kpos < len_ref[0, 0]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = mx_ref[...]                                 # (g, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_cur), 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    sm_ref[...] = sm_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    mx_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...]
+        m_ref[0, 0] = mx_ref[...][:, 0]
+        l_ref[0, 0] = sm_ref[...][:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 length: jax.Array, *, block_k: int = 256,
+                 interpret: bool = True):
+    """q (B, H, d); k/v (B, Hkv, S, d); length (B,) valid prefix length.
+
+    Returns flash partials (o (B, H, d) f32 unnormalized, m (B, H) f32,
+    l (B, H) f32). Final output = o / l after cross-shard combination.
+    """
+    B, H, d = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bk = min(block_k, S)
+    nk = pl.cdiv(S, bk)
+    scale = d ** -0.5
+    qg = q.reshape(B, Hkv, g, d)
+    len2 = jnp.broadcast_to(length[:, None], (B, 1)).astype(jnp.int32)
+    kern = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk)
+    o, m, l = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h, j: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len2, qg, k, v)
+    return o.reshape(B, H, d), m.reshape(B, H), l.reshape(B, H)

@@ -1,0 +1,172 @@
+"""hash_probe — the RPC hash-table handler's hot path as a Pallas kernel.
+
+Two kernels:
+
+- `hash_find`: embarrassingly parallel probe loop, vectorized over a tile
+  of `bm` requests; the local table stays resident in VMEM across the whole
+  request batch (one HBM read), each probe is a VMEM gather — exactly the
+  "expressive control flow at the target, zero extra network phases"
+  property the paper attributes to RPC handlers.
+- `hash_insert`: sequential over requests within an owner (insert-or-assign
+  must observe earlier inserts in the same batch — same serialization
+  argument as amo_apply), but each record read/write is a vectorized
+  rec_w-word VMEM slice.
+
+Layout: table (P, L) int32, nslots records of rec_w = 2 + vw words
+[flag | key | val...] per rank; flag low byte 0=EMPTY, 2=READY.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _find_kernel(table_ref, starts_ref, keys_ref, mask_ref,
+                 found_ref, vals_ref, *, nslots, rec_w, max_probes):
+    # table (1, L); starts/keys/mask (1, bm); found (1, bm); vals (1, bm, vw)
+    table = table_ref[0]
+    starts = starts_ref[0]
+    keys = keys_ref[0]
+    bm = starts.shape[0]
+    vw = rec_w - 2
+
+    def probe(j, carry):
+        found, vals, stop = carry
+        slot = (starts + j) % nslots
+        base = slot * rec_w
+        idx = base[:, None] + jnp.arange(rec_w)[None, :]   # (bm, rec_w)
+        rec = jnp.take(table, idx.reshape(-1), axis=0,
+                       mode="clip").reshape(bm, rec_w)
+        state = rec[:, 0] & 255
+        hit = (~stop) & (state == 2) & (rec[:, 1] == keys)
+        empty = (~stop) & (state == 0)
+        vals = jnp.where(hit[:, None], rec[:, 2:], vals)
+        return found | hit, vals, stop | hit | empty
+
+    found0 = jnp.zeros((bm,), jnp.bool_)
+    vals0 = jnp.zeros((bm, vw), jnp.int32)
+    found, vals, _ = jax.lax.fori_loop(0, max_probes, probe,
+                                       (found0, vals0, found0))
+    ok = mask_ref[0] != 0
+    found_ref[0] = (found & ok).astype(jnp.int32)
+    vals_ref[0] = jnp.where((found & ok)[:, None], vals, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("nslots", "rec_w", "max_probes",
+                                             "block_m", "interpret"))
+def hash_find(table: jax.Array, starts: jax.Array, keys: jax.Array,
+              mask: jax.Array, *, nslots: int, rec_w: int,
+              max_probes: int = 8, block_m: int = 128,
+              interpret: bool = True):
+    """Vectorized batched find. table (P, L); starts/keys/mask (P, m).
+    Returns (found (P, m) bool, vals (P, m, rec_w-2))."""
+    P, L = table.shape
+    m = starts.shape[1]
+    bm = min(block_m, m)
+    grid_m = pl.cdiv(m, bm)
+    vw = rec_w - 2
+    kern = functools.partial(_find_kernel, nslots=nslots, rec_w=rec_w,
+                             max_probes=max_probes)
+    found, vals = pl.pallas_call(
+        kern,
+        grid=(P, grid_m),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bm), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bm, vw), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, grid_m * bm), jnp.int32),
+            jax.ShapeDtypeStruct((P, grid_m * bm, vw), jnp.int32),
+        ],
+        interpret=interpret,
+    )(table, _pad(starts, grid_m * bm), _pad(keys, grid_m * bm),
+      _pad(mask.astype(jnp.int32), grid_m * bm))
+    return found[:, :m] != 0, vals[:, :m]
+
+
+def _pad(x: jax.Array, to: int) -> jax.Array:
+    if x.shape[1] == to:
+        return x
+    pad = [(0, 0), (0, to - x.shape[1])] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, pad)
+
+
+def _insert_kernel(table_ref, starts_ref, keys_ref, vals_ref, mask_ref,
+                   ok_ref, out_ref, *, nslots, rec_w, max_probes):
+    # sequential insert-or-assign over the owner's request list
+    out_ref[...] = table_ref[...]
+    m = starts_ref.shape[1]
+    vw = rec_w - 2
+
+    def body(j, _):
+        start = starts_ref[0, j]
+        key = keys_ref[0, j]
+        ok = mask_ref[0, j] != 0
+
+        def probe(p, carry):
+            slot, kind = carry  # kind: 0 searching, 1 hit, 2 empty
+            s = (start + p) % nslots
+            rec = pl.load(out_ref, (0, pl.ds(s * rec_w, 2)))
+            state = rec[0] & 255
+            hit = (kind == 0) & (state == 2) & (rec[1] == key)
+            empty = (kind == 0) & (state == 0)
+            slot = jnp.where(hit | empty, s, slot)
+            kind = jnp.where(hit, 1, jnp.where(empty, 2, kind))
+            return slot, kind
+
+        slot, kind = jax.lax.fori_loop(0, max_probes, probe,
+                                       (jnp.int32(-1), jnp.int32(0)))
+        can = ok & (kind > 0)
+        base = jnp.where(can, slot * rec_w, 0)
+        cur = pl.load(out_ref, (0, pl.ds(base, rec_w)))
+        val = pl.load(vals_ref, (0, j, pl.ds(0, vw)))
+        rec = jnp.concatenate([jnp.full((1,), 2, jnp.int32), key[None], val])
+        pl.store(out_ref, (0, pl.ds(base, rec_w)), jnp.where(can, rec, cur))
+        pl.store(ok_ref, (0, pl.ds(j, 1)), can.astype(jnp.int32)[None])
+        return 0
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("nslots", "rec_w", "max_probes",
+                                             "interpret"))
+def hash_insert(table: jax.Array, starts: jax.Array, keys: jax.Array,
+                vals: jax.Array, mask: jax.Array, *, nslots: int,
+                rec_w: int, max_probes: int = 8, interpret: bool = True):
+    """Serialized batched insert-or-assign. vals (P, m, rec_w-2).
+    Returns (ok (P, m) bool, table')."""
+    P, L = table.shape
+    m = starts.shape[1]
+    vw = rec_w - 2
+    kern = functools.partial(_insert_kernel, nslots=nslots, rec_w=rec_w,
+                             max_probes=max_probes)
+    ok, new_table = pl.pallas_call(
+        kern,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, vw), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, m), jnp.int32),
+            jax.ShapeDtypeStruct((P, L), jnp.int32),
+        ],
+        interpret=interpret,
+    )(table, starts, keys, vals, mask.astype(jnp.int32))
+    return ok != 0, new_table

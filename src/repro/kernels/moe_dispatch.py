@@ -1,0 +1,84 @@
+"""moe_dispatch — expert histogram + stable position assignment.
+
+The routing hot spot of MoE dispatch is, structurally, the paper's
+fetch-and-add: every token performs FAA(counter[expert], 1) and its old
+value is the token's slot in that expert's buffer. The serialized
+`amo_apply` lane would do this in O(T) scalar steps; this kernel is the
+TPU-native *vectorized* equivalent: one-hot expansion (MXU-friendly
+(bt, E) tiles) + in-tile exclusive cumsum + a per-expert running counter
+carried in VMEM scratch across tiles. Same linearized semantics (token i
+precedes token j if i < j), 128-lane throughput instead of a scalar loop.
+
+Output feeds the capacity-bounded all_to_all dispatch in models/moe.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dispatch_kernel(ids_ref, pos_ref, counts_ref, carry_ref, *, nt):
+    it = pl.program_id(0)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    ids = ids_ref[0]                                  # (bt,)
+    bt = ids.shape[0]
+    E = carry_ref.shape[1]
+    onehot = (ids[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (bt, E), 1)).astype(jnp.int32)     # (bt, E)
+    incl = jnp.cumsum(onehot, axis=0)
+    excl = incl - onehot                              # rank within this tile
+    rank_in_tile = jnp.sum(excl * onehot, axis=1)
+    base = jnp.sum(carry_ref[...] * onehot, axis=1)   # carried counter value
+    pos_ref[0] = base + rank_in_tile
+    carry_ref[...] = carry_ref[...] + incl[-1:, :]
+
+    @pl.when(it == nt - 1)
+    def _finalize():
+        counts_ref[...] = carry_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "block_t",
+                                             "interpret"))
+def moe_dispatch(expert_ids: jax.Array, *, n_experts: int,
+                 block_t: int = 256, interpret: bool = True):
+    """expert_ids (T,) int32 -> (counts (E,) int32, position (T,) int32).
+
+    position[i] = #{j < i : expert_j == expert_i}: the FAA ticket each
+    token would have drawn from its expert's counter.
+    """
+    T = expert_ids.shape[0]
+    bt = min(block_t, T)
+    nt = pl.cdiv(T, bt)
+    padded = jnp.pad(expert_ids, (0, nt * bt - T),
+                     constant_values=n_experts)  # pad ids hash to no expert
+    padded = jnp.where(padded >= n_experts, n_experts - 1, padded)
+    # Padding tokens alias expert E-1 but are sliced off the position
+    # output; counts are corrected below.
+    kern = functools.partial(_dispatch_kernel, nt=nt)
+    pos, counts = pl.pallas_call(
+        kern,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((1, bt), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, bt), lambda i: (0, i)),
+            pl.BlockSpec((1, n_experts), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, nt * bt), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_experts), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n_experts), jnp.int32)],
+        interpret=interpret,
+    )(padded[None])
+    counts = counts[0]
+    npad = nt * bt - T
+    counts = counts.at[n_experts - 1].add(-npad)
+    return counts, pos[0, :T]

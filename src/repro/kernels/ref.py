@@ -1,0 +1,211 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are written independently of the kernel bodies (sequential/naive
+semantics, no tiling) and are the ground truth for the per-kernel
+shape/dtype sweep tests in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# AMO opcodes — shared integer codes with kernels/amo_apply.py and
+# core.types.AmoKind.
+OP_PUT, OP_GET, OP_CAS, OP_FAA, OP_FOR, OP_FAND, OP_FXOR = range(7)
+
+
+# ---------------------------------------------------------------------------
+# amo_apply: serialized batched atomics against one local shard ("NIC lane")
+# ---------------------------------------------------------------------------
+def amo_apply(local: Array, ops: Array, mask: Array
+              ) -> Tuple[Array, Array]:
+    """Sequential oracle. local (L,) int32; ops (m, 4) int32 rows
+    [off, opcode, a, b]; mask (m,) bool. Returns (old (m,), local').
+    Op j observes the state left by ops < j — NIC arrival-order semantics.
+    """
+
+    def step(local, x):
+        op, ok = x
+        off, code, a, b = op[0], op[1], op[2], op[3]
+        cur = local[off]
+        new = jnp.select(
+            [code == OP_PUT, code == OP_GET, code == OP_CAS, code == OP_FAA,
+             code == OP_FOR, code == OP_FAND, code == OP_FXOR],
+            [b, cur, jnp.where(cur == a, b, cur), cur + a,
+             cur | a, cur & a, cur ^ a], cur)
+        local = local.at[off].set(jnp.where(ok, new, cur))
+        return local, jnp.where(ok, cur, 0)
+
+    local2, old = jax.lax.scan(step, local, (ops, mask))
+    return old, local2
+
+
+# ---------------------------------------------------------------------------
+# hash_probe: open-addressing probe over one local shard (AM handler body)
+# ---------------------------------------------------------------------------
+def hash_find(table: Array, starts: Array, keys: Array, mask: Array,
+              nslots: int, rec_w: int, max_probes: int
+              ) -> Tuple[Array, Array]:
+    """table (L,) int32 with nslots records of rec_w words
+    [flag|key|val...]; starts/keys/mask (m,). Returns (found (m,),
+    vals (m, rec_w-2)). State low byte: 0 empty / 2 ready."""
+    vw = rec_w - 2
+
+    def one(start, key, ok):
+        def body(j, carry):
+            found, vals, stop = carry
+            s = (start + j) % nslots
+            rec = jax.lax.dynamic_slice(table, (s * rec_w,), (rec_w,))
+            state = rec[0] & 255
+            hit = (~stop) & (state == 2) & (rec[1] == key)
+            empty = (~stop) & (state == 0)
+            vals = jnp.where(hit, rec[2:], vals)
+            return found | hit, vals, stop | hit | empty
+
+        found, vals, _ = jax.lax.fori_loop(
+            0, max_probes, body,
+            (jnp.bool_(False), jnp.zeros((vw,), jnp.int32),
+             jnp.bool_(False)))
+        return found & ok, jnp.where(found & ok, vals, 0)
+
+    return jax.vmap(one)(starts, keys, mask)
+
+
+def hash_insert(table: Array, starts: Array, keys: Array, vals: Array,
+                mask: Array, nslots: int, rec_w: int, max_probes: int
+                ) -> Tuple[Array, Array]:
+    """Sequential insert-or-assign oracle. vals (m, rec_w-2).
+    Returns (ok (m,), table')."""
+    vw = rec_w - 2
+
+    def step(table, x):
+        start, key, val, ok = x
+
+        def body(j, carry):
+            slot, kind = carry  # kind 0=searching 1=hit 2=empty
+            s = (start + j) % nslots
+            rec = jax.lax.dynamic_slice(table, (s * rec_w,), (2,))
+            state = rec[0] & 255
+            hit = (kind == 0) & (state == 2) & (rec[1] == key)
+            empty = (kind == 0) & (state == 0)
+            slot = jnp.where(hit | empty, s, slot)
+            kind = jnp.where(hit, 1, jnp.where(empty, 2, kind))
+            return slot, kind
+
+        slot, kind = jax.lax.fori_loop(0, max_probes, body,
+                                       (jnp.int32(-1), jnp.int32(0)))
+        can = ok & (kind > 0)
+        rec = jnp.concatenate([jnp.array([2], jnp.int32), key[None], val])
+        base = jnp.where(can, slot * rec_w, 0)
+        cur = jax.lax.dynamic_slice(table, (base,), (rec_w,))
+        table = jax.lax.dynamic_update_slice(
+            table, jnp.where(can, rec, cur), (base,))
+        return table, can
+
+    table2, ok = jax.lax.scan(step, table, (starts, keys, vals, mask))
+    return ok, table2
+
+
+# ---------------------------------------------------------------------------
+# flash attention (fwd): causal / local-window GQA attention
+# ---------------------------------------------------------------------------
+def mha(q: Array, k: Array, v: Array, *, causal: bool = True,
+        window: int = 0, scale: float | None = None) -> Array:
+    """q (B,H,S,d), k/v (B,Hkv,Skv,d). GQA by head broadcast. window > 0
+    restricts attention to the last `window` positions (inclusive)."""
+    B, H, S, d = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kf = jnp.repeat(k, g, axis=1)
+    vf = jnp.repeat(v, g, axis=1)
+    scale = (d ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None] + (Skv - S)  # align ends (decode suffix)
+    kpos = jnp.arange(Skv)[None, :]
+    m = jnp.ones((S, Skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    logits = jnp.where(m, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention(q: Array, k: Array, v: Array, length: Array,
+                     *, scale: float | None = None
+                     ) -> Tuple[Array, Array, Array]:
+    """Single-token decode with stats. q (B,H,d); k/v (B,Hkv,S,d);
+    length (B,) valid cache length. Returns (o (B,H,d) — *unnormalized*
+    partial numerator, m (B,H), l (B,H)) so shards combine associatively:
+        o = sum_j exp(s_j - m) v_j,  l = sum_j exp(s_j - m),  m = max_j s_j.
+    """
+    B, H, d = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) * scale
+    valid = jnp.arange(S)[None, None, :] < length[:, None, None]
+    s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid, jnp.exp(s - msafe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhk,bhkd->bhd", p, vf)
+    return o, m, l
+
+
+def combine_decode_stats(o: Array, m: Array, l: Array) -> Array:
+    """Combine per-shard (o, m, l) partials along leading axis -> (B,H,d).
+    This is the RPC-style distributed decode: each KV shard returns stats."""
+    mg = jnp.max(m, axis=0)
+    msafe = jnp.where(jnp.isfinite(mg), mg, 0.0)
+    w = jnp.exp(jnp.where(jnp.isfinite(m), m - msafe[None], -jnp.inf))
+    w = jnp.where(jnp.isfinite(m), w, 0.0)
+    num = jnp.sum(o * w[..., None], axis=0)
+    den = jnp.sum(l * w, axis=0)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# moe_dispatch: expert histogram + stable positions (batched FAA lane)
+# ---------------------------------------------------------------------------
+def moe_dispatch(expert_ids: Array, n_experts: int
+                 ) -> Tuple[Array, Array]:
+    """expert_ids (T,) int32 -> (counts (E,), position (T,)) where
+    position[i] = #{j < i : expert_j == expert_i} (stable rank within
+    expert). Equivalent to T chained FAAs on per-expert counters."""
+    onehot = (expert_ids[:, None] ==
+              jnp.arange(n_experts)[None, :]).astype(jnp.int32)
+    counts = jnp.sum(onehot, axis=0)
+    incl = jnp.cumsum(onehot, axis=0)
+    position = jnp.take_along_axis(
+        incl - onehot, expert_ids[:, None], axis=1)[:, 0]
+    return counts, position
+
+
+# ---------------------------------------------------------------------------
+# rg_lru: gated linear recurrence h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+def rg_lru_scan(a: Array, b: Array, h0: Array | None = None) -> Array:
+    """a, b (B, S, D) f32; h0 (B, D) initial state. Returns h (B, S, D)."""
+    B, S, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.swapaxes(a, 0, 1),
+                                    jnp.swapaxes(b, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,66 @@
+"""rg_lru — blocked gated linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+The sequence-mixing hot spot of recurrentgemma (RG-LRU) and the mLSTM/sLSTM
+cell updates reduce to this elementwise first-order recurrence. The TPU
+adaptation: the recurrence is sequential in S but embarrassingly parallel
+in (B, D), so we tile D onto the 128-lane VPU and walk S in VMEM-resident
+chunks with the carry h in scratch — grid (B, nd, ns) with the s axis
+minor-most. HBM traffic is exactly one read of (a, b) and one write of h:
+memory-bound by construction, which the roofline analysis confirms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rg_lru_kernel(a_ref, b_ref, h0_ref, h_ref, carry_ref, *, bs):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0][None].astype(jnp.float32)  # (1, bd)
+
+    a = a_ref[0].astype(jnp.float32)                     # (bs, bd)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bs, step, carry_ref[...][0])
+    carry_ref[...] = h[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d",
+                                             "interpret"))
+def rg_lru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None,
+                *, block_s: int = 256, block_d: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """a, b (B, S, D); h0 (B, D) -> h (B, S, D) with
+    h_t = a_t * h_{t-1} + b_t (h_{-1} = h0)."""
+    B, S, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+    bs, bd = min(block_s, S), min(block_d, D)
+    ns, nd = pl.cdiv(S, bs), pl.cdiv(D, bd)
+    kern = functools.partial(_rg_lru_kernel, bs=bs)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda ib, id_, is_: (ib, is_, id_)),
+            pl.BlockSpec((1, bs, bd), lambda ib, id_, is_: (ib, is_, id_)),
+            pl.BlockSpec((1, bd), lambda ib, id_, is_: (ib, id_)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd),
+                               lambda ib, id_, is_: (ib, is_, id_)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

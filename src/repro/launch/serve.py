@@ -1,0 +1,70 @@
+"""Serving driver: batched greedy decoding with the distributed KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+      --reduced --batch 4 --prompt-len 12 --gen-len 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import registry
+from ..models import lm
+from ..models import sharding as shd
+from . import mesh as mesh_mod
+from . import steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = mesh_mod.make_host_mesh()
+    max_len = args.prompt_len + args.gen_len + 1
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+
+    with shd.mesh_context(mesh):
+        params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+        state = lm.init_decode_state(cfg, args.batch, max_len)
+        if cfg.family == "encdec":
+            state["enc"] = jnp.asarray(
+                rng.normal(0, 1, state["enc"].shape), state["enc"].dtype)
+        serve_step = jax.jit(steps.make_serve_step(cfg),
+                             donate_argnums=(1,))
+        # prompt ingestion (token-by-token prefill through the decode path)
+        tok = jnp.asarray(prompts[:, 0], jnp.int32)
+        outs = [np.asarray(tok)]
+        t0 = time.time()
+        for t in range(1, max_len):
+            nxt, state = serve_step(params, state, {"tokens": tok})
+            if t < args.prompt_len:
+                tok = jnp.asarray(prompts[:, t], jnp.int32)  # teacher force
+            else:
+                tok = nxt
+                outs.append(np.asarray(tok))
+        dt = time.time() - t0
+        gen = np.stack(outs[1:], axis=1)
+        print(f"[serve] {args.batch} seqs x {args.gen_len} tokens in "
+              f"{dt:.2f}s ({args.batch*args.gen_len/dt:.1f} tok/s)")
+        for b in range(min(args.batch, 2)):
+            print(f"[serve] seq{b}: prompt={prompts[b].tolist()} "
+                  f"gen={gen[b].tolist()}")
+        return gen
+
+
+if __name__ == "__main__":
+    main()

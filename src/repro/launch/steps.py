@@ -1,0 +1,217 @@
+"""Step builders: the jit-able train_step / prefill_step / serve_step for
+any (arch × shape), plus the NamedSharding trees the dry-run and trainers
+pass as in_shardings/out_shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models import lm
+from ..models import sharding as shd
+from ..optim import make_optimizer, warmup_cosine
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+def _to_shardings(spec_tree):
+    """Logical-name-tuple tree -> NamedSharding tree (needs mesh ctx)."""
+    return jax.tree.map(
+        lambda names: shd.named_sharding(*names),
+        spec_tree, is_leaf=lambda x: isinstance(x, tuple) and
+        all(n is None or isinstance(n, str) for n in x))
+
+
+def sanitize_shardings(shardings, shapes):
+    """jit in_shardings require every sharded dim to divide evenly. For
+    leaves where a rule doesn't divide (e.g. batch=1 at long_500k, 4 mLSTM
+    heads on a 16-wide axis), drop trailing mesh axes of that dim's spec
+    until it divides — per-leaf, per-dim."""
+    mesh = shd.current_mesh()
+    if mesh is None:
+        return shardings
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat_sh, treedef = jax.tree.flatten(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    flat_shape = jax.tree.leaves(shapes)
+    out = []
+    for sh, spec in zip(flat_sh, flat_shape):
+        if sh is None:
+            out.append(sh)
+            continue
+        dims = spec.shape
+        parts = list(sh.spec) + [None] * (len(dims) - len(sh.spec))
+        new_parts = []
+        for dim, part in zip(dims, parts):
+            if part is None:
+                new_parts.append(None)
+                continue
+            axes = list(part) if isinstance(part, tuple) else [part]
+            while axes:
+                prod = 1
+                for a in axes:
+                    prod *= sizes[a]
+                if dim % prod == 0:
+                    break
+                axes.pop()
+            new_parts.append(tuple(axes) if len(axes) > 1 else
+                             (axes[0] if axes else None))
+        out.append(NamedSharding(mesh, P(*new_parts)))
+    return treedef.unflatten(out)
+
+
+def param_shardings(cfg: ArchConfig):
+    from ..configs import registry
+    return sanitize_shardings(_to_shardings(lm.param_specs(cfg)),
+                              registry.params_specs(cfg))
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec):
+    if shape.kind == "train":
+        specs = {"tokens": (None, "batch", None)}
+        if cfg.family == "encdec":
+            specs["frames"] = (None, "batch", None, None)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = (None, "batch", None, None)
+    elif shape.kind == "prefill":
+        specs = {"tokens": ("batch", None)}
+        if cfg.family == "encdec":
+            specs["frames"] = ("batch", None, None)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = ("batch", None, None)
+    else:
+        specs = {"tokens": ("batch",)}
+    return _to_shardings(specs)
+
+
+def decode_state_shardings(cfg: ArchConfig):
+    return _to_shardings(lm.decode_state_logical_specs(cfg))
+
+
+def opt_state_shardings(cfg: ArchConfig, opt_state_shape):
+    """Optimizer slots follow their parameter's sharding: full-shape slots
+    (Adam m/v) reuse it directly; Adafactor's factored vr (shape[:-1]) and
+    vc (shape[:-2]+shape[-1:]) inherit the matching sub-spec. Anything
+    unmatched (counts) is replicated."""
+    logical = jax.tree.leaves(
+        lm.param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(n is None or isinstance(n, str) for n in x))
+    shapes = [p.shape for p in jax.tree.leaves(
+        jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0))))]
+    table = {}
+    for names, shp in zip(logical, shapes):
+        table.setdefault(shp, names)
+        if len(shp) >= 1:
+            table.setdefault(tuple(shp[:-1]), tuple(names[:-1]))
+        if len(shp) >= 2:
+            table.setdefault(tuple(shp[:-2]) + (shp[-1],),
+                             tuple(names[:-2]) + (names[-1],))
+
+    def one(leaf):
+        return shd.named_sharding(*table.get(leaf.shape, ()))
+
+    return jax.tree.map(one, opt_state_shape)
+
+
+# ---------------------------------------------------------------------------
+# Train step (with in-step gradient accumulation over microbatches)
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, *, lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000):
+    init_fn, update_fn = make_optimizer(
+        cfg.optimizer, warmup_cosine(lr, warmup, total_steps))
+
+    def train_step(params, opt_state, batch, step):
+        """batch leaves have leading (accum, microbatch, ...)."""
+        accum = batch["tokens"].shape[0]
+
+        def micro(carry, mb):
+            gsum, lsum = carry
+            loss, grads = jax.value_and_grad(lm.loss_fn)(params, cfg, mb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, lsum + loss), None
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (gzero, 0.0), batch)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        new_params, new_opt, gnorm = update_fn(grads, opt_state, params,
+                                               step)
+        metrics = {"loss": lsum / accum, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return init_fn, train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        x = lm._forward(params, cfg, batch["tokens"], extra=batch)
+        logits = lm.logits_fn(params, cfg, x[:, -1:])
+        return logits[:, 0]
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, state, batch):
+        """One decode step for the whole request batch; greedy next token."""
+        logits, state = lm.decode_step(params, cfg, state, batch["tokens"])
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, state
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Convenience: fully-jitted cell (used by dryrun + trainers)
+# ---------------------------------------------------------------------------
+def jitted_cell(cfg: ArchConfig, shape: ShapeSpec, *, donate: bool = True):
+    """Build (fn, in_shardings, out_shardings, arg_specs) for the cell's
+    step under the *current* mesh context."""
+    from ..configs import registry
+
+    specs = registry.input_specs(cfg, shape)
+    bsh = sanitize_shardings(batch_shardings(cfg, shape), specs)
+    psh = param_shardings(cfg)
+    if shape.kind == "train":
+        init_fn, step = make_train_step(cfg)
+        opt_shape = jax.eval_shape(
+            init_fn, jax.eval_shape(
+                lambda: lm.init_params(cfg, jax.random.PRNGKey(0))))
+        osh = sanitize_shardings(opt_state_shardings(cfg, opt_shape),
+                                 opt_shape)
+        scalar = shd.named_sharding()
+        fn = jax.jit(step,
+                     in_shardings=(psh, osh, bsh, scalar),
+                     out_shardings=(psh, osh,
+                                    {"loss": scalar, "grad_norm": scalar}),
+                     donate_argnums=(0, 1) if donate else ())
+        args = (registry.params_specs(cfg), opt_shape, specs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return fn, args
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        out_sh = shd.named_sharding("batch", "vocab")
+        fn = jax.jit(step, in_shardings=(psh, bsh), out_shardings=out_sh)
+        args = (registry.params_specs(cfg), specs)
+        return fn, args
+    if shape.kind == "decode":
+        step = make_serve_step(cfg)
+        st = registry.decode_state_specs(cfg, shape)
+        ssh = sanitize_shardings(decode_state_shardings(cfg), st)
+        tok_sh = sanitize_shardings(shd.named_sharding("batch"),
+                                    specs["tokens"])
+        fn = jax.jit(step, in_shardings=(psh, ssh, bsh),
+                     out_shardings=(tok_sh, ssh),
+                     donate_argnums=(1,) if donate else ())
+        args = (registry.params_specs(cfg), st, specs)
+        return fn, args
+    raise ValueError(shape.kind)

@@ -1,0 +1,107 @@
+"""End-to-end training driver: data pipeline -> train_step -> async
+checkpointing -> straggler monitor -> (simulated) elastic restart.
+
+Real runs on this CPU container use --reduced (family-preserving small
+config) or smollm-135m with a small batch; the full configs are exercised
+via launch/dryrun.py. The loop structure is the production one:
+deterministic data keyed by (seed, step, host), write-behind checkpoints,
+heartbeats after every step, restart-from-latest on relaunch.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --reduced --steps 50 --batch 8 --seq 64 --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import registry
+from ..configs.base import ShapeSpec
+from ..data import SyntheticLM
+from ..models import lm
+from ..models import sharding as shd
+from ..runtime import AsyncCheckpointer, StragglerMonitor
+from ..runtime import checkpoint as ckpt_mod
+from . import mesh as mesh_mod
+from . import steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--total-steps", type=int, default=None,
+                    help="schedule horizon (fixed across restarts)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data", default="data,model",
+                    help="mesh axes sizes, e.g. 1,1")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeSpec("cli", seq_len=args.seq, global_batch=args.batch,
+                      kind="train", grad_accum=args.accum)
+    mesh = mesh_mod.make_host_mesh()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, seed=args.seed)
+    monitor = StragglerMonitor(n_hosts=1)
+    ckpt = AsyncCheckpointer(args.ckpt) if args.ckpt else None
+
+    with shd.mesh_context(mesh):
+        total = args.total_steps or args.steps
+        init_fn, train_step = steps.make_train_step(
+            cfg, lr=args.lr, warmup=min(20, total // 4 + 1),
+            total_steps=total)
+        params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = init_fn(params)
+        start = 0
+        if args.ckpt:
+            latest = ckpt_mod.latest_step(args.ckpt)
+            if latest is not None:
+                print(f"[train] restoring step {latest} from {args.ckpt}")
+                params, opt_state = ckpt_mod.load_checkpoint(
+                    args.ckpt, latest, (params, opt_state))
+                params = jax.tree.map(jnp.asarray, params)
+                opt_state = jax.tree.map(jnp.asarray, opt_state)
+                start = latest
+        jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+        losses = []
+        for step in range(start, args.steps):
+            t0 = time.time()
+            batch = data.train_batch(cfg, shape, step)
+            params, opt_state, metrics = jit_step(
+                params, opt_state, batch, jnp.int32(step))
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            monitor.heartbeat(0, step, time.time() - t0)
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.submit(step + 1, (params, opt_state))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"dt {time.time()-t0:.2f}s", flush=True)
+            plan = monitor.plan()
+            if plan:
+                print(f"[train] straggler plan: {plan}")
+        if ckpt:
+            ckpt.submit(args.steps, (params, opt_state))
+            ckpt.close()
+        print(f"[train] done. loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

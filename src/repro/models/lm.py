@@ -1,0 +1,1205 @@
+"""The model zoo: one composable block stack covering all 10 assigned
+architectures (dense GQA, fine-grained/residual MoE, RG-LRU hybrid, xLSTM,
+enc-dec, VLM backbone).
+
+Everything is pure JAX (scan-over-layer-groups, remat per group); the
+paper's technique enters at three irregular-access points, each with a
+selectable rdma|rpc|auto backend (DESIGN.md §3):
+
+  * embedding / logits   (vocab-sharded table: gather rows vs owner-compute)
+  * MoE dispatch         (ship tokens via all_to_all vs pull expert weights)
+  * distributed decode   (seq-sharded KV + stats combine vs KV gather)
+
+Attention uses a chunked ("lax-flash") softmax so 32k prefill never
+materializes S×S logits; the Pallas kernels in ../kernels are the TPU hot
+paths of the same math (validated against the identical ref oracles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import (ATTN, LATTN, MLP, MOE, MLSTM, RGLRU, SLSTM,
+                            ArchConfig)
+from .. import perf
+from ..core import costmodel
+from ..core.types import Backend
+from ..kernels import ops as kops
+from . import sharding as shd
+
+Array = jax.Array
+CROSS = "cross"
+EATTN = "eattn"   # encoder (non-causal) attention
+
+
+# ===========================================================================
+# Primitives
+# ===========================================================================
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, hd); positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def _chunk_kv(x: Array, bk: int, nk: int) -> Array:
+    """(B, Skv, Hkv, hd) -> (nk, B, bk, Hkv, hd) zero-padded."""
+    B, Skv, Hkv, hd = x.shape
+    pad = nk * bk - Skv
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return xp.reshape(B, nk, bk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+
+def _chunk_mask(j, bk, S, Skv, causal, window, kv_len):
+    """Validity mask (B-or-1, S, bk) for kv chunk j."""
+    kpos = j * bk + jnp.arange(bk)
+    qpos = (jnp.arange(S) + (Skv - S))[:, None]  # queries end-aligned
+    ok = jnp.broadcast_to((kpos < Skv)[None, None, :], (1, S, bk))
+    if causal:
+        ok = ok & (kpos[None, None, :] <= qpos[None])
+    if window > 0:
+        ok = ok & (kpos[None, None, :] > qpos[None] - window)
+    if kv_len is not None:
+        ok = ok & (kpos[None, None, :] < kv_len[:, None, None])
+    return ok
+
+
+def _flash_fwd(q, k, v, causal, window, kv_len, block_k):
+    """Running-softmax scan over kv chunks. q (B,S,H,hd) k/v (B,Skv,Hkv,hd).
+    Returns (out (B,S,H,hd), m (B,S,Hkv,g), l (B,S,Hkv,g))."""
+    B, S, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, S, Hkv, g, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    bk = min(block_k, Skv)
+    nk = -(-Skv // bk)
+    kc, vc = _chunk_kv(k, bk, nk), _chunk_kv(v, bk, nk)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kb, vb, j = xs
+        s = jnp.einsum("bsked,bckd->bscke",
+                       qg, kb.astype(jnp.float32)) * scale
+        ok = _chunk_mask(j, bk, S, Skv, causal, window, kv_len)
+        s = jnp.where(ok[..., None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=2))
+        msafe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(s),
+                      jnp.exp(s - msafe[:, :, None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - msafe), 0.0)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bscke,bckd->bsked", p, vb.astype(jnp.float32))
+        l = l * alpha + jnp.sum(p, axis=2)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, S, Hkv, g, hd), jnp.float32)
+    m0 = jnp.full((B, S, Hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, g), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (kc, vc, jnp.arange(nk)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, S, H, hd)
+    return out.astype(q.dtype), m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_train(q, k, v, causal: bool, window: int, block_k: int):
+    """Memory-optimal attention for train/prefill: the backward recomputes
+    per-chunk probabilities from the saved softmax stats (m, l) — O(S·d)
+    residuals instead of the O(S²) the autodiff-of-scan would store. This
+    is the XLA-level twin of kernels/flash_attention.py."""
+    out, _, _ = _flash_fwd(q, k, v, causal, window, None, block_k)
+    return out
+
+
+def _flash_train_fwd(q, k, v, causal, window, block_k):
+    out, m, l = _flash_fwd(q, k, v, causal, window, None, block_k)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_train_bwd(causal, window, block_k, res, do):
+    q, k, v, out, m, l = res
+    B, S, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = hd ** -0.5
+    bk = min(block_k, Skv)
+    nk = -(-Skv // bk)
+    kc, vc = _chunk_kv(k, bk, nk), _chunk_kv(v, bk, nk)
+    qg = q.reshape(B, S, Hkv, g, hd).astype(jnp.float32)
+    dog = do.reshape(B, S, Hkv, g, hd).astype(jnp.float32)
+    og = out.reshape(B, S, Hkv, g, hd).astype(jnp.float32)
+    msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+    delta = jnp.sum(dog * og, axis=-1)                 # (B,S,Hkv,g)
+
+    def step(dq, xs):
+        kb, vb, j = xs
+        s = jnp.einsum("bsked,bckd->bscke",
+                       qg, kb.astype(jnp.float32)) * scale
+        ok = _chunk_mask(j, bk, S, Skv, causal, window, None)
+        p = jnp.where(ok[..., None, None],
+                      jnp.exp(s - msafe[:, :, None]) * linv[:, :, None],
+                      0.0)                              # normalized probs
+        dv = jnp.einsum("bscke,bsked->bckd", p, dog)
+        dp = jnp.einsum("bsked,bckd->bscke", dog, vb.astype(jnp.float32))
+        ds = p * (dp - delta[:, :, None]) * scale
+        dq = dq + jnp.einsum("bscke,bckd->bsked", ds, kb.astype(jnp.float32))
+        dk = jnp.einsum("bscke,bsked->bckd", ds, qg)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, S, Hkv, g, hd), jnp.float32)
+    dq, (dkc, dvc) = jax.lax.scan(step, dq0, (kc, vc, jnp.arange(nk)))
+    dk = dkc.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, Hkv, hd)[:, :Skv]
+    dv = dvc.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, Hkv, hd)[:, :Skv]
+    return (dq.reshape(B, S, H, hd).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+flash_train.defvjp(_flash_train_fwd, _flash_train_bwd)
+
+
+def chunked_flash(q: Array, k: Array, v: Array, *, causal: bool,
+                  window: int = 0, kv_len: Optional[Array] = None,
+                  block_k: int = 1024) -> Array:
+    """Attention front-end. Differentiable path (train/prefill) uses the
+    flash custom_vjp; decode paths (kv_len masking, never differentiated)
+    use the raw scan.
+
+    §Perf `causal_skip`: process q in N chunks, each attending only up to
+    its causal frontier (plus the window's lower bound for local
+    attention) — skipped kv blocks cost zero FLOPs instead of being
+    computed-then-masked. Positions stay aligned because the inner kernel
+    end-aligns queries to the kv slice.
+    """
+    if kv_len is not None:
+        out, _, _ = _flash_fwd(q, k, v, causal, window, kv_len, block_k)
+        return out
+    S, Skv = q.shape[1], k.shape[1]
+    if (not perf.flag("causal_skip") or not causal or S != Skv
+            or S <= 2 * block_k):
+        return flash_train(q, k, v, causal, window, block_k)
+    n_chunks = min(8, S // block_k)
+    bq = -(-S // n_chunks)
+    outs = []
+    for i in range(n_chunks):
+        qlo, qhi = i * bq, min(S, (i + 1) * bq)
+        klo = 0 if window <= 0 else max(0, qlo - window + 1)
+        outs.append(flash_train(q[:, qlo:qhi], k[:, klo:qhi],
+                                v[:, klo:qhi], causal, window, block_k))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ===========================================================================
+# Parameter initialization (per block kind; all arrays get a leading
+# n_groups axis via init_stack)
+# ===========================================================================
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_block(cfg: ArchConfig, kind: str, key) -> Dict[str, Array]:
+    D, F, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    R = cfg.rnn_width or D
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 12)
+    if kind in (ATTN, LATTN, EATTN, CROSS):
+        return {
+            "norm": jnp.zeros((D,), dt),
+            "wq": _dense(ks[0], (D, H * hd), dt),
+            "wk": _dense(ks[1], (D, Hkv * hd), dt),
+            "wv": _dense(ks[2], (D, Hkv * hd), dt),
+            "wo": _dense(ks[3], (H * hd, D), dt),
+        }
+    if kind == MLP:
+        return {
+            "norm": jnp.zeros((D,), dt),
+            "w1": _dense(ks[0], (D, F), dt),
+            "w3": _dense(ks[1], (D, F), dt),
+            "w2": _dense(ks[2], (F, D), dt),
+        }
+    if kind == MOE:
+        E, Fe = cfg.n_experts, cfg.moe_d_ff
+        p = {
+            "norm": jnp.zeros((D,), dt),
+            "router": _dense(ks[0], (D, E), jnp.float32),
+            "we1": _dense(ks[1], (E, D, Fe), dt),
+            "we3": _dense(ks[2], (E, D, Fe), dt),
+            "we2": _dense(ks[3], (E, Fe, D), dt),
+        }
+        if cfg.n_shared_experts:
+            Fs = cfg.n_shared_experts * Fe
+            p.update(ws1=_dense(ks[4], (D, Fs), dt),
+                     ws3=_dense(ks[5], (D, Fs), dt),
+                     ws2=_dense(ks[6], (Fs, D), dt))
+        if cfg.dense_residual:
+            p.update(wd1=_dense(ks[7], (D, F), dt),
+                     wd3=_dense(ks[8], (D, F), dt),
+                     wd2=_dense(ks[9], (F, D), dt))
+        return p
+    if kind == RGLRU:
+        return {
+            "norm": jnp.zeros((D,), dt),
+            "wx": _dense(ks[0], (D, R), dt),
+            "wg": _dense(ks[1], (D, R), dt),
+            "wr": _dense(ks[2], (D, R), dt),
+            "wo": _dense(ks[3], (R, D), dt),
+            "a_param": jnp.full((R,), 2.0, jnp.float32),  # sigmoid≈0.88
+        }
+    if kind == MLSTM:
+        return {
+            "norm": jnp.zeros((D,), dt),
+            "wq": _dense(ks[0], (D, H * hd), dt),
+            "wk": _dense(ks[1], (D, H * hd), dt),
+            "wv": _dense(ks[2], (D, H * hd), dt),
+            "wi": _dense(ks[3], (D, H), dt, scale=0.01),
+            "wf": _dense(ks[4], (D, H), dt, scale=0.01),
+            "wog": _dense(ks[5], (D, H * hd), dt),
+            "wo": _dense(ks[6], (H * hd, D), dt),
+        }
+    if kind == SLSTM:
+        return {
+            "norm": jnp.zeros((D,), dt),
+            "wz": _dense(ks[0], (D, R), dt),
+            "wi": _dense(ks[1], (D, R), dt, scale=0.01),
+            "wf": _dense(ks[2], (D, R), dt, scale=0.01),
+            "wog": _dense(ks[3], (D, R), dt),
+            "rz": _dense(ks[4], (R, R), dt),
+            "wo": _dense(ks[5], (R, D), dt),
+        }
+    raise ValueError(kind)
+
+
+# Logical sharding for each parameter (maps via models/sharding.py rules).
+_BLOCK_SPECS = {
+    "norm": (None,),
+    "wq": ("embed_fsdp", "heads"), "wk": ("embed_fsdp", "heads"),
+    "wv": ("embed_fsdp", "heads"), "wo": ("heads", "embed_fsdp"),
+    "w1": ("embed_fsdp", "ffn"), "w3": ("embed_fsdp", "ffn"),
+    "w2": ("ffn", "embed_fsdp"),
+    "router": (None, None),
+    # experts over "model" (EP); FSDP shard on the Fe dim so both the
+    # weight-gather and weight-stationary dispatch paths use one layout
+    "we1": ("experts", None, "embed_fsdp"),
+    "we3": ("experts", None, "embed_fsdp"),
+    "we2": ("experts", "embed_fsdp", None),
+    "ws1": ("embed_fsdp", "ffn"), "ws3": ("embed_fsdp", "ffn"),
+    "ws2": ("ffn", "embed_fsdp"),
+    "wd1": ("embed_fsdp", "ffn"), "wd3": ("embed_fsdp", "ffn"),
+    "wd2": ("ffn", "embed_fsdp"),
+    "wx": ("embed_fsdp", "ffn"), "wg": ("embed_fsdp", "ffn"),
+    "wr": ("embed_fsdp", "ffn"),
+    "a_param": (None,),
+    "wi": ("embed_fsdp", None), "wf": ("embed_fsdp", None),
+    "wog": ("embed_fsdp", "heads"),
+    "wz": ("embed_fsdp", "ffn"), "rz": (None, None),
+}
+
+
+def block_param_specs(cfg: ArchConfig, kind: str, stacked: bool
+                      ) -> Dict[str, tuple]:
+    p = jax.eval_shape(lambda: init_block(cfg, kind, jax.random.PRNGKey(0)))
+    lead = ("stage",) if stacked else ()
+    out = {}
+    for name in p:
+        spec = _BLOCK_SPECS[name]
+        if kind == SLSTM and name == "wo":
+            spec = ("ffn", "embed_fsdp")
+        if kind == RGLRU and name == "wo":
+            spec = ("ffn", "embed_fsdp")
+        out[name] = lead + spec
+    return out
+
+
+# ===========================================================================
+# Block application
+# ===========================================================================
+def _attn_qkv(p, x, cfg, positions, decode: bool = False):
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if decode and perf.flag("decode_wstat"):
+        # §Perf decode_wstat: one-token activations are tiny; replicate
+        # them so XLA computes with the FSDP weight shards in place
+        # (partial-sum) instead of all-gathering the weights every token.
+        h = shd.logical(h, None, None, "embed")
+    else:
+        h = shd.logical(h, "batch", None, "embed")
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+    q = shd.logical(q, "batch", None, "heads", None)
+    k = rope(k, positions, cfg.rope_theta)
+    q = rope(q, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block_train(p, x, cfg, kind: str) -> Array:
+    """Full-sequence attention (train / prefill); returns residual delta."""
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _attn_qkv(p, x, cfg, positions)
+    causal = kind != EATTN
+    window = cfg.local_window if kind == LATTN else 0
+    out = chunked_flash(q, k, v, causal=causal, window=window)
+    out = shd.logical(out, "batch", None, "heads", None)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    return shd.logical(y, "batch", "seq", "embed")
+
+
+def attn_block_decode(p, x, cfg, kind: str, cache, pos):
+    """One-token decode. cache = {k,v: (B, S_c, Hkv, hd)}; pos (B,) current
+    length. Global attn: S_c = max context. Local attn: ring of window W.
+
+    Backend selection (paper §3): 'rpc' keeps the cache seq-sharded and
+    reduces flash stats across shards (XLA distributed softmax — constant
+    reply bytes); 'rdma' gathers the cache to the query owner.
+    """
+    B, S, D = x.shape
+    assert S == 1
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    W = cache["k"].shape[1]
+    q, k, v = _attn_qkv(p, x, cfg, pos[:, None], decode=True)
+    slot = (pos % W) if kind == LATTN else pos
+
+    def upd(c, new):
+        idx = slot[:, None, None, None]
+        oh = (jnp.arange(W)[None, :, None, None] == idx)
+        return jnp.where(oh, new, c)
+
+    ck = upd(cache["k"], k)
+    cv = upd(cache["v"], v)
+    backend = _decode_backend(cfg, W, B)
+    if backend == Backend.RDMA:
+        ck = shd.logical(ck, "batch", None, None, None)      # gather cache
+        cv = shd.logical(cv, "batch", None, None, None)
+    else:
+        ck = shd.logical(ck, "batch", "kv_seq", None, None)  # owner-compute
+        cv = shd.logical(cv, "batch", "kv_seq", None, None)
+    if kind == LATTN:
+        # ring buffer: slot j holds absolute position p_j <= pos with
+        # p_j ≡ j (mod W); valid if within window.
+        pj = pos[:, None] - ((pos[:, None] - jnp.arange(W)[None]) % W)
+        valid = (pj >= 0) & (pj > pos[:, None] - W) & (pj <= pos[:, None])
+        out = _decode_attn_masked(q, ck, cv, valid)
+    else:
+        out = _decode_attn_distributed(q, ck, cv, pos, backend)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return shd.logical(y, "batch", None, "embed"), {"k": ck, "v": cv}
+
+
+def _decode_backend(cfg: ArchConfig, kv_len: int, batch: int) -> Backend:
+    b = Backend(cfg.decode_backend) if cfg.decode_backend != "auto" else None
+    if b is not None:
+        return b
+    shards = 16  # model-axis width of the production mesh
+    choice = costmodel.choose_attention_backend(
+        kv_bytes_per_shard=2 * kv_len // shards * cfg.n_kv_heads * cfg.hd * 2,
+        q_heads=cfg.n_heads, head_dim=cfg.hd, shards=shards)
+    return choice
+
+
+def _decode_attn_distributed(q, ck, cv, pos, backend: Backend):
+    """Global-attention decode over the (possibly seq-sharded) cache.
+
+    RPC style (shard_map): every KV shard runs flash partials over its
+    LOCAL slice and replies with (o, m, l) — constant-size stats — which
+    are combined associatively at the query owner (ref.combine_decode
+    semantics, the paper's aggregated-AM pattern; kernels/flash_decode.py
+    is the TPU kernel of the shard-local body). This also avoids the
+    baseline pathology where scanning kv chunks slices across the sharded
+    axis and XLA re-gathers the whole cache every chunk (§Perf log).
+    """
+    B, S, H, hd = q.shape
+    W, Hkv = ck.shape[1], ck.shape[2]
+    mesh = shd.current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if (backend == Backend.RDMA or mesh is None or tp == 1 or W % tp
+            or not perf.flag("decode_wstat")):
+        return chunked_flash(q, ck, cv, causal=False, kv_len=pos + 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    if B % dp:
+        return chunked_flash(q, ck, cv, causal=False, kv_len=pos + 1)
+    W_loc = W // tp
+    g = H // Hkv
+
+    def body(q_l, k_l, v_l, pos_l):
+        # q_l (Bl,1,H,hd); k_l/v_l (Bl, W_loc, Hkv, hd); pos_l (Bl,)
+        i = jax.lax.axis_index("model")
+        ln = jnp.clip(pos_l + 1 - i * W_loc, 0, W_loc)
+        qg = q_l[:, 0].reshape(-1, Hkv, g, hd).astype(jnp.float32)
+        kf = k_l.astype(jnp.float32)
+        s = jnp.einsum("bkgd,bwkd->bkgw", qg, kf) * hd ** -0.5
+        ok = (jnp.arange(W_loc)[None, None, None, :]
+              < ln[:, None, None, None])
+        s = jnp.where(ok, s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.where(ok, jnp.exp(s - msafe[..., None]), 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgw,bwkd->bkgd", p, v_l.astype(jnp.float32))
+        # --- the AM reply: constant-size flash stats to the query owner
+        oall = jax.lax.all_gather(o, "model")          # (tp, Bl, ...)
+        mall = jax.lax.all_gather(m, "model")
+        lall = jax.lax.all_gather(l, "model")
+        from ..kernels import ref as kref
+        Bl = q_l.shape[0]
+        comb = kref.combine_decode_stats(
+            oall.reshape(tp, Bl, Hkv * g, hd),
+            mall.reshape(tp, Bl, Hkv * g),
+            lall.reshape(tp, Bl, Hkv * g))
+        return comb.reshape(Bl, 1, H, hd).astype(q_l.dtype)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_axes, None, None, None),
+                  P(batch_axes, "model", None, None),
+                  P(batch_axes, "model", None, None),
+                  P(batch_axes)),
+        out_specs=P(batch_axes, None, None, None), check_vma=False)
+    return fn(q, ck, cv, pos)
+
+
+def _decode_attn_masked(q, k, v, valid):
+    """q (B,1,H,hd); k/v (B,W,Hkv,hd); valid (B,W)."""
+    B, _, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg,
+                   k.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bwkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cross_block(p, x, cfg, enc_states):
+    """Cross attention: each decoder layer projects K/V from the raw
+    encoder states (B, Se, D)."""
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    e = enc_states.astype(h.dtype)
+    ke = (e @ p["wk"]).reshape(B, -1, Hkv, hd)
+    ve = (e @ p["wv"]).reshape(B, -1, Hkv, hd)
+    out = chunked_flash(q, ke, ve, causal=False)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    return shd.logical(y, "batch", None, "embed")
+
+
+def mlp_block(p, x, cfg, w1="w1", w3="w3", w2="w2"):
+    h = rms_norm(x, p["norm"], cfg.norm_eps) if "norm" in p else x
+    h = shd.logical(h, "batch", None, "embed")
+    u = jax.nn.silu(h @ p[w1]) * (h @ p[w3])
+    u = shd.logical(u, "batch", None, "ffn")
+    y = u @ p[w2]
+    return shd.logical(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE block — the paper's technique as a first-class feature
+# ---------------------------------------------------------------------------
+def moe_block(p, x, cfg: ArchConfig) -> Array:
+    B, S, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    backend = _moe_backend(cfg, B * S)
+    mesh = shd.current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    dp = 1
+    if mesh is not None:
+        for a in ("pod", "data"):
+            dp *= mesh.shape.get(a, 1)
+    shardable = (mesh is not None and tp > 1 and cfg.n_experts % tp == 0
+                 and B % dp == 0)
+    if not shardable or backend == Backend.RDMA:
+        routed = _moe_local(p, h, cfg, gather_weights=backend == Backend.RDMA)
+    else:
+        routed = _moe_a2a(p, h, cfg, mesh)
+    y = routed
+    if cfg.n_shared_experts:
+        y = y + mlp_block(p, x, cfg, "ws1", "ws3", "ws2")
+    if cfg.dense_residual:
+        y = y + mlp_block(p, x, cfg, "wd1", "wd3", "wd2")
+    return shd.logical(y, "batch", "seq", "embed")
+
+
+def _moe_backend(cfg: ArchConfig, tokens: int) -> Backend:
+    if cfg.moe_backend != "auto":
+        return Backend(cfg.moe_backend)
+    expert_bytes = 3 * cfg.n_experts * cfg.d_model * cfg.moe_d_ff * 2
+    return costmodel.choose_moe_backend(
+        tokens_per_rank=max(tokens // 256, 1), d_model=cfg.d_model,
+        expert_bytes_per_rank=expert_bytes)
+
+
+def _route(h2, p, cfg):
+    """h2 (T, D) -> (expert_ids (T*k,), weights (T*k,), flat order)."""
+    logits = h2.astype(jnp.float32) @ p["router"]
+    w, ids = jax.lax.top_k(logits, cfg.top_k)          # (T, k)
+    w = jax.nn.softmax(w, axis=-1)
+    return ids.reshape(-1), w.reshape(-1).astype(h2.dtype)
+
+
+def _capacity(T: int, cfg: ArchConfig) -> int:
+    return max(4, int(T * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+
+
+def _expert_ffn(we1, we3, we2, buf):
+    """buf (E, C, D) -> (E, C, D) through each expert's SwiGLU."""
+    u = jnp.einsum("ecd,edf->ecf", buf, we1)
+    g = jnp.einsum("ecd,edf->ecf", buf, we3)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(u) * g, we2)
+
+
+def _moe_local(p, h, cfg: ArchConfig, gather_weights: bool) -> Array:
+    """RDMA-style / single-device MoE: expert weights come to the data
+    owner (all-gather when sharded); tokens never leave their shard."""
+    B, S, D = h.shape
+    h2 = h.reshape(-1, D)
+    T = h2.shape[0]
+    ids, w = _route(h2, p, cfg)
+    cap = _capacity(T, cfg)
+    we1, we3, we2 = p["we1"], p["we3"], p["we2"]
+    if gather_weights and shd.current_mesh() is not None:
+        # the explicit 'pull the structure to the requester' phase
+        we1 = shd.logical(we1, None, None, None)
+        we3 = shd.logical(we3, None, None, None)
+        we2 = shd.logical(we2, None, None, None)
+    counts, pos = kops.moe_dispatch(ids, n_experts=cfg.n_experts)
+    keep = pos < cap
+    tok = jnp.repeat(h2, cfg.top_k, axis=0)
+    buf = jnp.zeros((cfg.n_experts, cap, D), h.dtype)
+    buf = buf.at[jnp.where(keep, ids, cfg.n_experts),
+                 jnp.where(keep, pos, 0)].add(tok, mode="drop")
+    out_buf = _expert_ffn(we1, we3, we2, buf)
+    picked = out_buf.at[jnp.where(keep, ids, cfg.n_experts),
+                        jnp.where(keep, pos, 0)].get(
+        mode="fill", fill_value=0)
+    y = (picked * w[:, None]).reshape(T, cfg.top_k, D).sum(1)
+    return y.reshape(B, S, D)
+
+
+def _moe_a2a(p, h, cfg: ArchConfig, mesh) -> Array:
+    """RPC-style MoE: tokens are aggregated active messages shipped to the
+    expert owner over an explicit all_to_all; the 'handler' is the expert
+    FFN; one reply all_to_all returns results. Exactly the paper's Fig. 2
+    pattern at pod scale."""
+    tp = mesh.shape["model"]
+    E, k = cfg.n_experts, cfg.top_k
+    D = cfg.d_model
+    e_loc = E // tp
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    _, S_full, _ = h.shape
+    seq_over_model = S_full % tp == 0 and S_full > 1
+    xspec = P(batch_axes, "model" if seq_over_model else None, None)
+    pspec = {name: shd.resolve(*spec) for name, spec in
+             block_param_specs(cfg, MOE, stacked=False).items()
+             if name in ("router", "we1", "we3", "we2")}
+
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+
+    def body(h_loc, router, we1, we3, we2):
+        Bl, Sl, _ = h_loc.shape
+        h2 = h_loc.reshape(-1, D)
+        T = h2.shape[0]
+        cap = _capacity(T, cfg)
+        # --- the paper's chooser, inside the model: move the structure's
+        # contents (expert weight shards) to the requester, or move the
+        # aggregated requests (tokens) to the owner? Static byte compare.
+        token_bytes = 2 * dp * tp * cap * D          # AG + RS of tokens
+        weight_bytes = 3 * D * cfg.moe_d_ff          # AG of w1/w3/w2 shards
+        wstat = (perf.flag("moe_wstat") and bool(batch_axes)
+                 and token_bytes < weight_bytes)
+        if batch_axes and not wstat:
+            # weight-gather (ZeRO-3 style): weights move to the tokens
+            we1 = jax.lax.all_gather(we1, batch_axes, axis=2, tiled=True)
+            we3 = jax.lax.all_gather(we3, batch_axes, axis=2, tiled=True)
+            we2 = jax.lax.all_gather(we2, batch_axes, axis=1, tiled=True)
+        logits = h2.astype(jnp.float32) @ router
+        w, ids = jax.lax.top_k(logits, k)
+        w = jax.nn.softmax(w, axis=-1).astype(h_loc.dtype)
+        ids_f, w_f = ids.reshape(-1), w.reshape(-1)
+        counts, pos = kops.moe_dispatch(ids_f, n_experts=E)
+        keep = pos < cap
+        tok = jnp.repeat(h2, k, axis=0)
+        buf = jnp.zeros((E, cap, D), h_loc.dtype)
+        buf = buf.at[jnp.where(keep, ids_f, E),
+                     jnp.where(keep, pos, 0)].add(tok, mode="drop")
+        # ---- request phase: ship token buffers to expert owners --------
+        buf = buf.reshape(tp, e_loc, cap, D)
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0,
+                                 tiled=True)            # (tp*e_loc... )
+        buf = buf.reshape(tp, e_loc, cap, D).transpose(1, 0, 2, 3)
+        buf = buf.reshape(e_loc, tp * cap, D)
+        # ---- handler: local experts run their FFN ----------------------
+        if wstat:
+            # weight-stationary: tokens visit every Fe shard; partial
+            # outputs reduce-scatter back to the owning data row
+            bufg = jax.lax.all_gather(buf, batch_axes, axis=1, tiled=True)
+            part = _expert_ffn(we1, we3, we2, bufg)   # partial over Fe
+            out = jax.lax.psum_scatter(part, batch_axes,
+                                       scatter_dimension=1, tiled=True)
+        else:
+            out = _expert_ffn(we1, we3, we2, buf)
+        # ---- reply phase ------------------------------------------------
+        out = out.reshape(e_loc, tp, cap, D).transpose(1, 0, 2, 3)
+        out = out.reshape(tp, e_loc, cap, D)
+        out = jax.lax.all_to_all(out, "model", split_axis=0, concat_axis=0,
+                                 tiled=True)
+        out = out.reshape(E, cap, D)
+        picked = out.at[jnp.where(keep, ids_f, E),
+                        jnp.where(keep, pos, 0)].get(mode="fill",
+                                                     fill_value=0)
+        y = (picked * w_f[:, None]).reshape(T, k, D).sum(1)
+        return y.reshape(Bl, Sl, D)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, pspec["router"], pspec["we1"], pspec["we3"],
+                  pspec["we2"]),
+        out_specs=xspec, check_vma=False)
+    return fn(h, p["router"], p["we1"], p["we3"], p["we2"])
+
+
+# ---------------------------------------------------------------------------
+# Recurrent blocks
+# ---------------------------------------------------------------------------
+def _rnn_scan(step, carry0, xs, chunk: int = 64):
+    """scan with two-level remat (§Perf `mlstm_chunked`): the outer scan
+    saves only per-chunk carries; inner per-step residuals are
+    rematerialized in the backward — per-step state stacks (the xLSTM
+    memory catastrophe) shrink by ~chunk."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if not perf.flag("mlstm_chunked") or S % chunk or S <= chunk:
+        return jax.lax.scan(step, carry0, xs)
+
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((S // chunk, chunk) + a.shape[1:]), xs)
+
+    def outer(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    outer_r = jax.checkpoint(outer, prevent_cse=False)
+    carry, ys_c = jax.lax.scan(outer_r, carry0, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+def _pin_batch_only(*arrays):
+    """§Perf `rnn_local`: pin recurrence inputs to data-parallel-only
+    sharding so the timestep loop contains zero collectives (the baseline
+    emitted one all-gather per step per cell — 4e5 per train step on
+    xlstm — which is launch-latency death at pod scale)."""
+    if not perf.flag("rnn_local"):
+        return arrays
+    out = []
+    for a in arrays:
+        names = ["batch"] + [None] * (a.ndim - 1)
+        out.append(shd.logical(a, *names))
+    return tuple(out)
+
+
+def rglru_block(p, x, cfg, state=None):
+    """RecurrentGemma RG-LRU mixer. state (B, R) or None (train, h0=0).
+    Returns (delta, new_state)."""
+    B, S, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xr = h @ p["wx"]
+    gate = jax.nn.sigmoid(h @ p["wg"])
+    r = jax.nn.sigmoid(h @ p["wr"]).astype(jnp.float32)
+    log_a = 8.0 * r * jax.nn.log_sigmoid(p["a_param"])[None, None, :]
+    a = jnp.exp(log_a)
+    b = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+         * (xr * gate).astype(jnp.float32))
+    if x.shape[1] > 1:
+        # elementwise recurrence: keep the D axis model-sharded (unlike the
+        # matrix-state cells, no cross-D mixing happens inside the scan)
+        a = shd.logical(a, "batch", None, "ffn")
+        b = shd.logical(b, "batch", None, "ffn")
+    hs = kops.rg_lru_scan(a, b, state)
+    new_state = hs[:, -1]
+    y = hs.astype(x.dtype) @ p["wo"]
+    return shd.logical(y, "batch", "seq", "embed"), new_state
+
+
+def _mlstm_chunkwise(q, kk, v, it, ft, state, chunk: int = 128):
+    """Chunkwise-parallel mLSTM (§Perf `mlstm_chunked`, exact): the
+    C/n/m recurrence is materialized only at chunk boundaries; within a
+    chunk the output is the stabilized intra-chunk attention form plus the
+    inter-chunk carry term. Numerically identical to the sequential cell
+    (same stabilizer: m_t = F_t + max(m_prev, cummax_s(li_s - F_s))),
+    validated by the decode==forward tests.
+
+    q/kk/v (B,S,H,hd) f32 (pre-scaled); it/ft (B,S,H) raw gate logits.
+    Returns (h (B,S,H,hd), (C,n,m))."""
+    B, S, H, hd = q.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nc = S // c
+    C0, n0, m0 = state
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                       # (B,H,hd,hd),(B,H,hd),(B,H)
+        qc, kc, vc, ic, fc = xs               # (B,c,H,*)
+        lf = jax.nn.log_sigmoid(fc)           # (B,c,H)
+        F = jnp.cumsum(lf, axis=1)
+        rel = ic - F                          # li_s - F_s
+        M = jnp.maximum(m[:, None],
+                        jax.lax.cummax(rel, axis=1))        # (B,c,H)
+        inter = jnp.exp(m[:, None] - M)                     # (B,c,H)
+        d = jnp.exp(rel[:, None] - M[:, :, None])           # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        d = jnp.where(tri[None, :, :, None], d, 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * d
+        num = (inter[..., None] * jnp.einsum("bthd,bhde->bthe", qc, C)
+               + jnp.einsum("btsh,bshd->bthd", scores, vc))
+        # q·n_t decomposes into the same gate weights: no ñ materialization
+        qn = (inter * jnp.einsum("bthd,bhd->bth", qc, n)
+              + jnp.sum(scores, axis=2))
+        den = jnp.abs(qn)
+        h = num / jnp.maximum(den, 1.0)[..., None]
+        # chunk-end state
+        M_end, F_end = M[:, -1], F[:, -1]
+        w_end = jnp.exp(rel - M_end[:, None])               # (B,c,H)
+        C_new = (jnp.exp(m - M_end)[..., None, None] * C
+                 + jnp.einsum("bsh,bshd,bshe->bhde", w_end, kc, vc))
+        n_new = (jnp.exp(m - M_end)[..., None] * n
+                 + jnp.einsum("bsh,bshd->bhd", w_end, kc))
+        m_new = F_end + M_end
+        return (C_new, n_new, m_new), h
+
+    def to_chunks(a):
+        return a.reshape((B, nc, c) + a.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(to_chunks(a) for a in (q, kk, v, it, ft))
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, H, hd)
+    return h, (C, n, m)
+
+
+def mlstm_block(p, x, cfg, state=None):
+    """xLSTM mLSTM: matrix-memory cell, stabilized exponential gating.
+    state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)). Returns (delta, state')."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd).astype(jnp.float32) * hd ** -0.5
+    kk = (h @ p["wk"]).reshape(B, S, H, hd).astype(jnp.float32) * hd ** -0.25
+    v = (h @ p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    it = (h @ p["wi"]).astype(jnp.float32)           # (B, S, H)
+    ft = (h @ p["wf"]).astype(jnp.float32)
+    og = jax.nn.sigmoid((h @ p["wog"]).reshape(B, S, H, hd))
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, i_, f_ = xs
+        logf = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(logf + m, i_)
+        i = jnp.exp(i_ - m_new)
+        f = jnp.exp(logf + m - m_new)
+        C = f[..., None, None] * C + i[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = f[..., None] * n + i[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        ht = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n, m_new), ht
+
+    q, kk, v, it, ft, og = _pin_batch_only(q, kk, v, it, ft, og)
+    C0, n0, m0 = _pin_batch_only(C0, n0, m0)
+    if S > 1 and perf.flag("mlstm_chunked") and S % 2 == 0:
+        hs, (C, n, m) = _mlstm_chunkwise(q, kk, v, it, ft, (C0, n0, m0))
+    else:
+        xs = (q.transpose(1, 0, 2, 3), kk.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), it.transpose(1, 0, 2),
+              ft.transpose(1, 0, 2))
+        if S == 1:
+            (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+        else:
+            (C, n, m), hs = _rnn_scan(step, (C0, n0, m0), xs)
+        hs = hs.transpose(1, 0, 2, 3)                # (B, S, H, hd)
+    if perf.flag("rnn_local"):
+        hs = shd.logical(hs, "batch", None, None, None)
+    y = (og * hs.astype(x.dtype)).reshape(B, S, -1) @ p["wo"]
+    return shd.logical(y, "batch", "seq", "embed"), (C, n, m)
+
+
+def slstm_block(p, x, cfg, state=None):
+    """xLSTM sLSTM: scalar-memory cell with recurrent connection R_z.
+    state = (c, n, hprev, m) each (B, R)."""
+    B, S, D = x.shape
+    R = cfg.rnn_width or D
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z_in = (h @ p["wz"]).astype(jnp.float32)
+    i_in = (h @ p["wi"]).astype(jnp.float32)
+    f_in = (h @ p["wf"]).astype(jnp.float32)
+    og = jax.nn.sigmoid((h @ p["wog"]).astype(jnp.float32))
+    rz = p["rz"].astype(jnp.float32)
+    if state is None:
+        c0 = jnp.zeros((B, R), jnp.float32)
+        n0 = jnp.zeros((B, R), jnp.float32)
+        h0 = jnp.zeros((B, R), jnp.float32)
+        m0 = jnp.full((B, R), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    def step(carry, xs):
+        c, n, hp, m = carry
+        zt, it_, ft_, ot = xs
+        z = jnp.tanh(zt + hp @ rz)
+        logf = jax.nn.log_sigmoid(ft_)
+        m_new = jnp.maximum(logf + m, it_)
+        i = jnp.exp(it_ - m_new)
+        f = jnp.exp(logf + m - m_new)
+        c = f * c + i * z
+        n = f * n + i
+        ht = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, ht, m_new), ht
+
+    z_in, i_in, f_in, og = _pin_batch_only(z_in, i_in, f_in, og)
+    c0, n0, h0, m0 = _pin_batch_only(c0, n0, h0, m0)
+    xs = (z_in.transpose(1, 0, 2), i_in.transpose(1, 0, 2),
+          f_in.transpose(1, 0, 2), og.transpose(1, 0, 2))
+    if S == 1:
+        (c, n, hl, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), xs)
+    else:
+        (c, n, hl, m), hs = _rnn_scan(step, (c0, n0, h0, m0), xs)
+    hs = hs.transpose(1, 0, 2)
+    if perf.flag("rnn_local"):
+        hs = shd.logical(hs, "batch", None, None)
+    y = hs.astype(x.dtype) @ p["wo"]
+    return shd.logical(y, "batch", "seq", "embed"), (c, n, hl, m)
+
+
+# ===========================================================================
+# Stack: init / train forward / prefill / decode
+# ===========================================================================
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    dt = cfg.compute_dtype
+    pattern = cfg.layer_pattern()
+    G = cfg.n_groups
+
+    def stacked_group(key):
+        def one(k):
+            ks = jax.random.split(k, sum(len(l) for l in pattern))
+            i, out = 0, []
+            for layer in pattern:
+                blocks = []
+                for kind in layer:
+                    blocks.append(init_block(cfg, kind, ks[i]))
+                    i += 1
+                out.append(tuple(blocks))
+            return tuple(out)
+
+        return jax.vmap(one)(jax.random.split(key, G))
+
+    params = {
+        "embed": _dense(keys[0], (cfg.vocab_padded, cfg.d_model), dt,
+                        scale=0.02),
+        "groups": stacked_group(keys[1]),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if cfg.family == "encdec":
+        enc_pat = ((EATTN, MLP),)
+        dec_pat = ((ATTN, CROSS, MLP),)
+        def enc_stack(k):
+            def one(kk):
+                ks = jax.random.split(kk, 2)
+                return ((init_block(cfg, EATTN, ks[0]),
+                         init_block(cfg, MLP, ks[1])),)
+            return jax.vmap(one)(jax.random.split(k, cfg.n_enc_layers))
+        def dec_stack(k):
+            def one(kk):
+                ks = jax.random.split(kk, 3)
+                return ((init_block(cfg, ATTN, ks[0]),
+                         init_block(cfg, CROSS, ks[1]),
+                         init_block(cfg, MLP, ks[2])),)
+            return jax.vmap(one)(jax.random.split(k, cfg.n_layers))
+        params["enc_groups"] = enc_stack(keys[2])
+        params["groups"] = dec_stack(keys[3])
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical-name tuples matching init_params' tree structure."""
+    pattern = cfg.layer_pattern()
+
+    def group_specs(pat):
+        return tuple(tuple(block_param_specs(cfg, kind, stacked=True)
+                           for kind in layer) for layer in pat)
+
+    specs = {
+        "embed": ("vocab", "embed_fsdp"),
+        "groups": group_specs(pattern),
+        "final_norm": (None,),
+    }
+    if cfg.family == "encdec":
+        specs["enc_groups"] = group_specs(((EATTN, MLP),))
+        specs["groups"] = group_specs(((ATTN, CROSS, MLP),))
+        specs["enc_norm"] = (None,)
+    return specs
+
+
+def embed_tokens(params, cfg: ArchConfig, tokens: Array) -> Array:
+    table = params["embed"]
+    if cfg.embed_backend == "rdma" and shd.current_mesh() is not None:
+        # pull rows to the requester: table replicated first (all-gather)
+        table = shd.logical(table, None, None)
+    else:
+        # owner-compute: vocab-sharded table; XLA lowers the gather to
+        # local masked lookup + all-reduce (the aggregated-AM pattern)
+        table = shd.logical(table, "vocab", None)
+    x = jnp.take(table, tokens, axis=0)
+    return shd.logical(x, "batch", "seq", "embed") * cfg.d_model ** 0.5
+
+
+def _apply_layer(cfg, layer_blocks, layer_params, x, mode, cache_in,
+                 pos, enc_kv):
+    """Apply one layer (tuple of blocks) with residual connections.
+    Returns (x, cache_out)."""
+    cache_out = []
+    for b_idx, kind in enumerate(layer_blocks):
+        p = layer_params[b_idx]
+        if kind in (ATTN, LATTN, EATTN):
+            if mode == "decode":
+                delta, c = attn_block_decode(p, x, cfg, kind,
+                                             cache_in[b_idx], pos)
+                cache_out.append(c)
+            else:
+                delta = attn_block_train(p, x, cfg, kind)
+                cache_out.append(None)
+        elif kind == CROSS:
+            delta = cross_block(p, x, cfg, enc_kv)
+            cache_out.append(None)
+        elif kind == MLP:
+            delta = mlp_block(p, x, cfg)
+            cache_out.append(None)
+        elif kind == MOE:
+            delta = moe_block(p, x, cfg)
+            cache_out.append(None)
+        elif kind in (RGLRU, MLSTM, SLSTM):
+            fn = {RGLRU: rglru_block, MLSTM: mlstm_block,
+                  SLSTM: slstm_block}[kind]
+            st = cache_in[b_idx] if mode == "decode" else None
+            delta, st2 = fn(p, x, cfg, st)
+            cache_out.append(st2 if mode == "decode" else None)
+        else:
+            raise ValueError(kind)
+        x = x + delta
+    return x, tuple(cache_out)
+
+
+def _run_stack(params_groups, cfg: ArchConfig, x: Array, mode: str,
+               caches=None, pos=None, enc_kv=None, pattern=None):
+    pattern = pattern or cfg.layer_pattern()
+
+    def group_fn(x, xs):
+        g_params, g_cache = xs
+        new_cache = []
+        for li, layer_blocks in enumerate(pattern):
+            cin = g_cache[li] if g_cache is not None else \
+                tuple(None for _ in layer_blocks)
+            x, cout = _apply_layer(cfg, layer_blocks, g_params[li], x,
+                                   mode, cin, pos, enc_kv)
+            new_cache.append(cout)
+        return x, tuple(new_cache)
+
+    if mode == "train" and cfg.remat:
+        group_fn = jax.checkpoint(group_fn,
+                                  prevent_cse=False)
+
+    if mode == "decode" and perf.flag("decode_unroll"):
+        # §Perf decode_unroll: a scanned group loop dynamic-slices the
+        # (G, ...) stacked KV caches every iteration, which XLA can only
+        # reshard by full rematerialization (gathers the whole cache per
+        # layer group). Static per-group indexing keeps cache shards in
+        # place; decode bodies are small so the unrolled HLO stays cheap.
+        G = jax.tree.leaves(params_groups)[0].shape[0]
+        new_caches = []
+        for g in range(G):
+            g_params = jax.tree.map(lambda a: a[g], params_groups)
+            g_cache = jax.tree.map(lambda a: a[g], caches)
+            x, cout = group_fn(x, (g_params, g_cache))
+            new_caches.append(cout)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(group_fn, x, (params_groups, caches))
+    return x, new_caches
+
+
+def logits_fn(params, cfg: ArchConfig, x: Array) -> Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = shd.logical(params["embed"], "vocab", None)
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return shd.logical(logits, "batch", None, "vocab")
+
+
+def _forward(params, cfg: ArchConfig, tokens: Array,
+             extra: Optional[Dict[str, Array]] = None) -> Array:
+    """Token (+frontend stub) -> final hidden states (train/prefill)."""
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm" and extra is not None and "patch_embeds" in extra:
+        # anyres frontend stub: precomputed patch embeddings prepended
+        pe = extra["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([shd.logical(pe, "batch", None, "embed"), x], 1)
+    if cfg.family == "encdec":
+        frames = extra["frames"].astype(x.dtype)
+        e = shd.logical(frames, "batch", None, "embed")
+        e, _ = _run_stack(params["enc_groups"], cfg, e, "train",
+                          pattern=((EATTN, MLP),))
+        enc_states = rms_norm(e, params["enc_norm"], cfg.norm_eps)
+        x, _ = _run_stack(params["groups"], cfg, x, "train",
+                          enc_kv=enc_states, pattern=((ATTN, CROSS, MLP),))
+    else:
+        x, _ = _run_stack(params["groups"], cfg, x, "train")
+    return x
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, Array]) -> Array:
+    tokens = batch["tokens"]
+    x = _forward(params, cfg, tokens, extra=batch)
+    if cfg.family == "vlm":
+        x = x[:, -tokens.shape[1]:]           # loss on text positions only
+    logits = logits_fn(params, cfg, x)
+    targets = batch.get("labels", tokens)
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = targets[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve path)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=None) -> Dict[str, Any]:
+    """Cache template; shapes only — usable with jax.eval_shape for the
+    dry run. Ring buffers for local attention, full rings for global."""
+    dt = dtype or cfg.compute_dtype
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    G = cfg.n_groups
+    R = cfg.rnn_width or cfg.d_model
+    H = cfg.n_heads
+
+    def layer_cache(kind):
+        if kind in (ATTN, EATTN):
+            W = max_len
+            return {"k": jnp.zeros((G, batch, W, Hkv, hd), dt),
+                    "v": jnp.zeros((G, batch, W, Hkv, hd), dt)}
+        if kind == LATTN:
+            W = min(cfg.local_window, max_len)
+            return {"k": jnp.zeros((G, batch, W, Hkv, hd), dt),
+                    "v": jnp.zeros((G, batch, W, Hkv, hd), dt)}
+        if kind == RGLRU:
+            return jnp.zeros((G, batch, R), jnp.float32)
+        if kind == MLSTM:
+            return (jnp.zeros((G, batch, H, hd, hd), jnp.float32),
+                    jnp.zeros((G, batch, H, hd), jnp.float32),
+                    jnp.full((G, batch, H), -1e30, jnp.float32))
+        if kind == SLSTM:
+            return tuple(jnp.zeros((G, batch, R), jnp.float32)
+                         if i != 3 else
+                         jnp.full((G, batch, R), -1e30, jnp.float32)
+                         for i in range(4))
+        return None
+
+    pattern = (((ATTN, CROSS, MLP),) if cfg.family == "encdec"
+               else cfg.layer_pattern())
+    caches = tuple(tuple(layer_cache(kind) for kind in layer)
+                   for layer in pattern)
+    state = {"caches": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "encdec":
+        Se = 1500  # whisper frame capacity
+        state["enc"] = jnp.zeros((batch, Se, cfg.d_model), dt)
+    return state
+
+
+def decode_state_logical_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    """Logical-axis tuples mirroring init_decode_state's tree structure
+    (the serve-path analogue of param_specs)."""
+
+    def layer_cache(kind):
+        if kind in (ATTN, EATTN, LATTN):
+            return {"k": (None, "batch", "kv_seq", None, None),
+                    "v": (None, "batch", "kv_seq", None, None)}
+        if kind == RGLRU:
+            return (None, "batch", "ffn")
+        if kind == MLSTM:
+            # heads are few (4); shard the wide hd dims over the model axis
+            return ((None, "batch", None, None, "ffn"),
+                    (None, "batch", None, "ffn"),
+                    (None, "batch", None))
+        if kind == SLSTM:
+            return tuple((None, "batch", "ffn") for _ in range(4))
+        return None
+
+    pattern = (((ATTN, CROSS, MLP),) if cfg.family == "encdec"
+               else cfg.layer_pattern())
+    caches = tuple(tuple(layer_cache(kind) for kind in layer)
+                   for layer in pattern)
+    specs = {"caches": caches, "pos": ("batch",)}
+    if cfg.family == "encdec":
+        specs["enc"] = ("batch", None, None)
+    return specs
+
+
+def decode_step(params, cfg: ArchConfig, state, tokens: Array
+                ) -> Tuple[Array, Any]:
+    """One token for every sequence. tokens (B,) -> (logits (B, V), state')."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens[:, None])
+    pos = state["pos"]
+    pattern = (((ATTN, CROSS, MLP),) if cfg.family == "encdec"
+               else cfg.layer_pattern())
+    x, new_caches = _run_stack(params["groups"], cfg, x, "decode",
+                               caches=state["caches"], pos=pos,
+                               enc_kv=state.get("enc"), pattern=pattern)
+    logits = logits_fn(params, cfg, x)[:, 0]
+    new_state = dict(state)
+    new_state["caches"] = new_caches
+    new_state["pos"] = pos + 1
+    return logits, new_state

@@ -1,0 +1,5 @@
+from .optimizers import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, make_optimizer,
+                         warmup_cosine)
+from .compression import (compress_int8, decompress_int8,
+                          compressed_mean_grads)

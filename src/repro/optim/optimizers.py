@@ -1,0 +1,157 @@
+"""Optimizers: AdamW (f32 moments, small/medium archs) and Adafactor
+(factored second moment, β1=0 — the only thing that fits 0.5T-param arctic
+on one v5e pod). Both keep state sharded exactly like the parameters
+(FSDP/ZeRO-style: the param tree is already fully sharded over
+(pod, data) × model, so optimizer state inherits that).
+
+All update math runs in f32 regardless of param dtype (bf16 params get an
+f32 master step applied then cast back — stochastic-rounding-free variant,
+documented).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable[[Array], Array]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup, warm, cos)
+    return schedule
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                      for x in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** cf)
+        vh = v / (1 - b2 ** cf)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    m2, v2, p2 = _tree_map3(upd, grads, state["m"], state["v"], params)
+    return p2, {"m": m2, "v": v2, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), β1=0, factored v for >=2D tensors.
+# ---------------------------------------------------------------------------
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"slots": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, lr, *, d=1e-3, eps=1e-30,
+                     clip_thresh=1.0, weight_decay=0.0):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    beta2 = 1.0 - cf ** -0.8
+
+    def one(g, slot, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            u = g / jnp.sqrt(jnp.maximum(vhat, eps))
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            u = g / jnp.sqrt(jnp.maximum(v, eps))
+            new_slot = {"v": v}
+        rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_thresh)
+        pf = p.astype(jnp.float32)
+        step_size = jnp.maximum(d, lr)
+        new_p = pf - step_size * u - lr * weight_decay * pf
+        return new_slot, new_p.astype(p.dtype)
+
+    is_slot = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state["slots"])
+    flat_p = jax.tree.leaves(params)
+    out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    slots = treedef.unflatten([o[0] for o in out])
+    new_p = treedef.unflatten([o[1] for o in out])
+    return new_p, {"slots": slots, "count": count}
+
+
+def _tree_map3(fn, a, b, c, d):
+    flat_a, treedef = jax.tree.flatten(a)
+    flat_b = jax.tree.leaves(b)
+    flat_c = jax.tree.leaves(c)
+    flat_d = jax.tree.leaves(d)
+    out = [fn(x, y, z, w) for x, y, z, w in
+           zip(flat_a, flat_b, flat_c, flat_d)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+            treedef.unflatten([o[2] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# Front-end
+# ---------------------------------------------------------------------------
+def make_optimizer(kind: str, schedule, *, max_grad_norm: float = 1.0,
+                   weight_decay: float = 0.1):
+    """Returns (init_fn, update_fn(grads, state, params, step))."""
+    if kind == "adamw":
+        def update(grads, state, params, step):
+            grads, gn = clip_by_global_norm(grads, max_grad_norm)
+            p2, s2 = adamw_update(grads, state, params, schedule(step),
+                                  weight_decay=weight_decay)
+            return p2, s2, gn
+        return adamw_init, update
+    if kind == "adafactor":
+        def update(grads, state, params, step):
+            grads, gn = clip_by_global_norm(grads, max_grad_norm)
+            p2, s2 = adafactor_update(grads, state, params, schedule(step),
+                                      weight_decay=weight_decay)
+            return p2, s2, gn
+        return adafactor_init, update
+    raise ValueError(kind)

@@ -1,0 +1,56 @@
+"""Perf-iteration flags (EXPERIMENTS.md §Perf).
+
+Each flag gates one beyond-baseline optimization; the paper-faithful
+baseline is REPRO_PERF="causal_skip=0,mlstm_chunked=0,moe_wstat=0,
+rnn_local=0". Defaults are the optimized configuration (production).
+
+  causal_skip    flash attention processes q in chunks and skips kv
+                 blocks above the causal frontier (~1.8x attention FLOPs)
+  mlstm_chunked  two-level remat scan for recurrent cells: per-step scan
+                 residuals become per-chunk (memory term / ~chunk)
+  moe_wstat      weight-stationary MoE: ship tokens over BOTH mesh axes
+                 (all-gather tokens over data + psum partial FFN) instead
+                 of all-gathering FSDP expert-weight shards
+  rnn_local      pin recurrent-cell scans to data-parallel-only sharding
+                 (kills per-timestep collectives inside the scan)
+"""
+from __future__ import annotations
+
+import os
+
+_DEFAULTS = {
+    "causal_skip": True,
+    "mlstm_chunked": True,
+    "moe_wstat": True,
+    "rnn_local": True,
+    "decode_wstat": True,
+    "decode_unroll": True,
+}
+
+
+def _parse():
+    out = dict(_DEFAULTS)
+    env = os.environ.get("REPRO_PERF", "")
+    for tok in env.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            out[k.strip()] = v.strip() not in ("0", "false", "off")
+        else:
+            out[tok] = True
+    return out
+
+
+_FLAGS = _parse()
+
+
+def flag(name: str) -> bool:
+    return _FLAGS[name]
+
+
+def reload():
+    global _FLAGS
+    _FLAGS = _parse()
+    return _FLAGS

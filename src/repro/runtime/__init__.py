@@ -1,0 +1,4 @@
+from .checkpoint import (AsyncCheckpointer, load_checkpoint,
+                         restore_sharded, save_checkpoint)
+from .straggler import StragglerMonitor
+from .elastic import reshard_tree

@@ -1,0 +1,156 @@
+"""Fault-tolerant checkpointing: atomic manifests, async write-behind,
+elastic (mesh-size-independent) restore.
+
+Layout:
+  <dir>/step_<N>.tmp/...   (written)
+  <dir>/step_<N>/          (atomic rename on completion)
+    manifest.json          {step, leaf paths, shapes, dtypes, treedef}
+    leaf_<i>.npy           one file per pytree leaf
+
+Restart protocol: `latest_step` scans for the highest *complete* step
+(rename is the commit point: a crash mid-write leaves only a .tmp that is
+ignored and garbage-collected). Restore is mesh-independent — leaves are
+full (unsharded) arrays re-device_put under the new mesh's shardings
+(`restore_sharded`), which is what elastic re-scale uses.
+
+The async writer is the write-behind queue from DESIGN.md §3: the train
+loop snapshots to host (device_get — the only sync point) and hands the
+write to a daemon thread, so step N+1's compute overlaps step N's I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import queue as pyqueue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef, str(treedef)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f"step_{step}.tmp"
+    final = d / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef),
+                "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"leaf_{i}.npy", arr)
+        manifest["leaves"].append({"index": i, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # commit point
+    return str(final)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and \
+                not p.name.endswith(".tmp") and \
+                (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, template: Any) -> Any:
+    """Load into the structure of `template` (leaf order must match)."""
+    d = pathlib.Path(directory) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = jax.tree.flatten(template)
+    assert manifest["n_leaves"] == len(leaves), \
+        f"checkpoint has {manifest['n_leaves']} leaves, template " \
+        f"{len(leaves)}"
+    loaded = [np.load(d / f"leaf_{i}.npy") for i in range(len(leaves))]
+    return treedef.unflatten(loaded)
+
+
+def restore_sharded(directory: str, step: int, template: Any,
+                    shardings: Any) -> Any:
+    """Elastic restore: load full arrays and place them under the target
+    mesh's shardings (any mesh size)."""
+    host_tree = load_checkpoint(directory, step, template)
+    flat_h, treedef = jax.tree.flatten(host_tree)
+    flat_s = jax.tree.leaves(shardings)
+    if len(flat_s) == len(flat_h):
+        placed = [jax.device_put(h, s) for h, s in zip(flat_h, flat_s)]
+    else:
+        placed = [jax.device_put(h) for h in flat_h]
+    return treedef.unflatten(placed)
+
+
+def gc_checkpoints(directory: str, keep: int = 3):
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return
+    steps = sorted([int(p.name.split("_")[1]) for p in d.iterdir()
+                    if p.is_dir() and p.name.startswith("step_")
+                    and not p.name.endswith(".tmp")])
+    for s in steps[:-keep]:
+        shutil.rmtree(d / f"step_{s}", ignore_errors=True)
+    for p in d.iterdir():
+        if p.name.endswith(".tmp"):
+            shutil.rmtree(p, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Write-behind checkpointing: snapshot on the caller thread (cheap),
+    serialize + fsync on a daemon thread. At most `depth` outstanding
+    writes; `wait()` drains (call before exit / before restore)."""
+
+    def __init__(self, directory: str, keep: int = 3, depth: int = 1):
+        self.directory = directory
+        self.keep = keep
+        self._q: pyqueue.Queue = pyqueue.Queue(maxsize=depth)
+        self._errors: list = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, host_tree = item
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+                gc_checkpoints(self.directory, self.keep)
+            except Exception as e:  # surfaced on wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree: Any):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self):
+        self._q.put(None)
+        self._q.join()

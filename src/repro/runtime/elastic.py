@@ -1,0 +1,55 @@
+"""Elastic re-scale: move a training state between meshes of different
+size/shape.
+
+Because checkpoints store full (unsharded) arrays and shardings are
+derived from logical rules (models/sharding.py), re-scaling is just
+re-placement: build the new mesh, resolve the same logical specs against
+it, device_put. Uneven divisions are legal under jit (XLA pads), so a
+16x16 -> 8x16 shrink after evicting a host row needs no model changes.
+
+The PGAS data structures re-scale by *re-insertion*: hash-table placement
+depends on nranks, so `rehash_table` drains the old table (C_R phase) and
+reinserts into a fresh one on the new rank count — the standard BCL
+resize story, executed with the same batched phases.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hashtable as ht_mod
+from ..core.types import Promise
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    flat_t, treedef = jax.tree.flatten(tree)
+    flat_s = jax.tree.leaves(shardings)
+    assert len(flat_t) == len(flat_s)
+    return treedef.unflatten(
+        [jax.device_put(x, s) if s is not None else jax.device_put(x)
+         for x, s in zip(flat_t, flat_s)])
+
+
+def rehash_table(old: ht_mod.DHashTable, new_nranks: int,
+                 max_probes: int = 16) -> ht_mod.DHashTable:
+    """Drain + reinsert under the new rank count (batched phases)."""
+    P, L = old.win.data.shape
+    rec_w, vw = old.rec_w, old.val_words
+    recs = old.win.data.reshape(P, old.nslots, rec_w)
+    flags = recs[..., 0] & 255
+    live = flags == 2
+    keys = recs[..., 1]
+    vals = recs[..., 2:]
+    new = ht_mod.make_hashtable(new_nranks, old.nslots * P // new_nranks
+                                + max_probes, vw)
+    # Reinsert per old-rank batches; ranks beyond new_nranks fold onto
+    # the new table via ownership hashing inside insert.
+    nslots = old.nslots
+    k2 = keys.reshape(new_nranks, -1)
+    v2 = vals.reshape(new_nranks, -1, vw)
+    m2 = live.reshape(new_nranks, -1)
+    new, ok, _ = ht_mod.insert_rdma(new, k2, v2, promise=Promise.CW,
+                                    valid=m2, max_probes=max_probes)
+    return new

@@ -1,0 +1,213 @@
+"""Distributed data-structure semantics: RDMA backend == RPC backend ==
+python oracle, across promise levels (paper Tables II/III structures)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import am as am_mod
+from repro.core import hashtable as ht_mod
+from repro.core import queue as q_mod
+from repro.core import routing, window
+from repro.core.types import AmoKind, Promise
+
+
+P = 4
+
+
+# ---------------------------------------------------------------------------
+# Routing engine
+# ---------------------------------------------------------------------------
+def test_route_delivers_every_valid_op():
+    rng = np.random.default_rng(0)
+    dst = jnp.asarray(rng.integers(0, P, (P, 9)), jnp.int32)
+    payload = jnp.asarray(rng.integers(0, 100, (P, 9, 2)), jnp.int32)
+    routed = routing.route(dst, payload, cap=9)
+    assert int(routed.dropped.sum()) == 0
+    assert bool(routed.op_ok.all())
+    # every payload word appears exactly once at its owner
+    flat, mask = routing.flatten_owner_view(routed)
+    got = np.sort(np.asarray(flat[np.asarray(mask)])[:, 0])
+    want = np.sort(np.asarray(payload[..., 0]).ravel())
+    np.testing.assert_array_equal(got, want)
+
+
+def test_route_capacity_drops_are_reported():
+    dst = jnp.zeros((P, 8), jnp.int32)          # everyone targets rank 0
+    payload = jnp.ones((P, 8, 1), jnp.int32)
+    routed = routing.route(dst, payload, cap=3)
+    # per-origin cap of 3 toward one destination -> 5 dropped per origin
+    assert int(routed.dropped.sum()) == P * 5
+
+
+def test_reply_routing_aligns_with_op_order():
+    rng = np.random.default_rng(1)
+    dst = jnp.asarray(rng.integers(0, P, (P, 6)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 32, (P, 6)), jnp.int32)
+    win = window.make_window(P, 32)
+    # write rank*1000+off at each location, then get and check
+    base = jnp.arange(P)[:, None] * 1000 + jnp.arange(32)[None]
+    win = window.Window(data=base.astype(jnp.int32))
+    got = window.rdma_get(win, dst, off, width=1)[..., 0]
+    want = dst * 1000 + off
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# One-sided AMOs
+# ---------------------------------------------------------------------------
+def test_faa_tickets_are_unique_and_dense():
+    win = window.make_window(P, 4)
+    dst = jnp.zeros((P, 3), jnp.int32)
+    off = jnp.zeros((P, 3), jnp.int32)
+    old, win = window.rdma_fao(win, dst, off, 1, AmoKind.FAA)
+    tickets = np.sort(np.asarray(old).ravel())
+    np.testing.assert_array_equal(tickets, np.arange(P * 3))
+    assert int(win.data[0, 0]) == P * 3
+
+
+def test_cas_exactly_one_winner():
+    win = window.make_window(P, 2)
+    dst = jnp.zeros((P, 2), jnp.int32)
+    off = jnp.zeros((P, 2), jnp.int32)
+    old, win = window.rdma_cas(win, dst, off, 0, 7)
+    winners = int((np.asarray(old) == 0).sum())
+    assert winners == 1
+    assert int(win.data[0, 0]) == 7
+
+
+def test_fao_variants_match_numpy():
+    rng = np.random.default_rng(2)
+    for kind, op in [(AmoKind.FOR, np.bitwise_or),
+                     (AmoKind.FAND, np.bitwise_and),
+                     (AmoKind.FXOR, np.bitwise_xor)]:
+        init = rng.integers(0, 2**20, (P, 8)).astype(np.int32)
+        win = window.Window(data=jnp.asarray(init))
+        dst = jnp.asarray(rng.integers(0, P, (P, 5)), jnp.int32)
+        off = jnp.asarray(rng.integers(0, 8, (P, 5)), jnp.int32)
+        operand = jnp.asarray(rng.integers(0, 2**20, (P, 5)), jnp.int32)
+        _, win2 = window.rdma_fao(win, dst, off, operand, kind)
+        expect = init.copy()
+        for p in range(P):
+            for i in range(5):
+                d, o = int(dst[p, i]), int(off[p, i])
+                expect[d, o] = op(expect[d, o], int(operand[p, i]))
+        np.testing.assert_array_equal(np.asarray(win2.data), expect)
+
+
+# ---------------------------------------------------------------------------
+# Hash table
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["rdma_crw", "rdma_cw", "rpc"])
+def test_hashtable_insert_find_roundtrip(backend):
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.permutation(10000)[:P * 8].reshape(P, 8) + 1,
+                       jnp.int32)
+    vals = jnp.stack([keys * 2, keys + 5], axis=-1)
+    ht = ht_mod.make_hashtable(P, 64, 2)
+    if backend == "rpc":
+        eng = am_mod.AMEngine(P)
+        ht_mod.build_am_handlers(ht, eng)
+        ht, ok = ht_mod.insert_rpc(ht, eng, keys, vals)
+        found, got = ht_mod.find_rpc(ht, eng, keys)
+    else:
+        promise = Promise.CRW if backend == "rdma_crw" else Promise.CW
+        ht, ok, probes = ht_mod.insert_rdma(ht, keys, vals, promise=promise)
+        ht, found, got = ht_mod.find_rdma(ht, keys, promise=Promise.CR)
+    assert bool(ok.all()) and bool(found.all())
+    np.testing.assert_array_equal(np.asarray(got[..., 0]),
+                                  np.asarray(keys * 2))
+    # misses stay misses
+    if backend == "rpc":
+        found2, _ = ht_mod.find_rpc(ht, eng, keys + 100000)
+    else:
+        ht, found2, _ = ht_mod.find_rdma(ht, keys + 100000,
+                                         promise=Promise.CR)
+    assert not bool(found2.any())
+
+
+def test_hashtable_crw_find_with_lock():
+    keys = jnp.arange(P * 4, dtype=jnp.int32).reshape(P, 4) + 1
+    vals = jnp.stack([keys, keys], axis=-1)
+    ht = ht_mod.make_hashtable(P, 32, 2)
+    ht, ok, _ = ht_mod.insert_rdma(ht, keys, vals, promise=Promise.CRW)
+    ht, found, got = ht_mod.find_rdma(ht, keys, promise=Promise.CRW)
+    assert bool(found.all())
+    # read locks fully released: flag state back to READY with no readers
+    recs = ht.win.data.reshape(P, ht.nslots, ht.rec_w)
+    flags = np.asarray(recs[..., 0])
+    assert ((flags == 0) | (flags == 2)).all()
+
+
+def test_hashtable_rpc_insert_or_assign_updates():
+    """RPC expressivity (paper §II-B): handler does insert-or-assign."""
+    eng = am_mod.AMEngine(P)
+    ht = ht_mod.make_hashtable(P, 32, 1)
+    ht_mod.build_am_handlers(ht, eng)
+    keys = jnp.arange(P * 2, dtype=jnp.int32).reshape(P, 2) + 1
+    ht, ok1 = ht_mod.insert_rpc(ht, eng, keys, keys[..., None] * 10)
+    ht, ok2 = ht_mod.insert_rpc(ht, eng, keys, keys[..., None] * 20)
+    assert bool(ok1.all()) and bool(ok2.all())
+    found, got = ht_mod.find_rpc(ht, eng, keys)
+    np.testing.assert_array_equal(np.asarray(got[..., 0]),
+                                  np.asarray(keys * 20))
+
+
+# ---------------------------------------------------------------------------
+# Queue
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("promise", [Promise.CRW, Promise.CW])
+def test_queue_push_pop_conservation(promise):
+    q = q_mod.make_queue(P, host=1, capacity=128, val_words=1)
+    vals = jnp.arange(P * 5, dtype=jnp.int32).reshape(P, 5, 1) + 1
+    q, ok = q_mod.push_rdma(q, vals, promise=promise)
+    assert bool(ok.all())
+    q, got, out = q_mod.pop_rdma(q, 6, promise=Promise.CR)
+    popped = np.asarray(out[np.asarray(got)]).ravel()
+    np.testing.assert_array_equal(np.sort(popped),
+                                  np.arange(P * 5) + 1)
+
+
+def test_queue_checksum_crw_push_costs_no_ready_cas():
+    """Checksum queue (paper Fig. 4): reader verifies payload checksum, so
+    the push is FAO + W (phases reported by the cost model), yet pops are
+    still safe."""
+    q = q_mod.make_queue(P, host=0, capacity=64, val_words=2, checksum=True)
+    vals = jnp.arange(P * 4 * 2, dtype=jnp.int32).reshape(P, 4, 2)
+    q, ok = q_mod.push_rdma(q, vals, promise=Promise.CRW)
+    assert bool(ok.all())
+    q, got, out = q_mod.pop_rdma(q, 5, promise=Promise.CRW)
+    assert int(got.sum()) == P * 4
+
+
+def test_queue_overflow_reports_failure():
+    q = q_mod.make_queue(P, host=0, capacity=6, val_words=1)
+    vals = jnp.ones((P, 4, 1), jnp.int32)
+    q, ok = q_mod.push_rdma(q, vals, promise=Promise.CW)
+    assert int(ok.sum()) == 6                 # ring held exactly capacity
+    assert int((~ok).sum()) == P * 4 - 6
+
+
+def test_queue_rpc_matches_rdma():
+    valsA = jnp.arange(P * 3, dtype=jnp.int32).reshape(P, 3, 1) + 1
+    qa = q_mod.make_queue(P, host=2, capacity=64, val_words=1)
+    qa, ok_a = q_mod.push_rdma(qa, valsA, promise=Promise.CW)
+    qb = q_mod.make_queue(P, host=2, capacity=64, val_words=1)
+    eng = am_mod.AMEngine(P)
+    q_mod.build_am_handlers(qb, eng)
+    qb, ok_b = q_mod.push_rpc(qb, eng, valsA)
+    assert bool(ok_a.all()) and bool(ok_b.all())
+    qa, got_a, out_a = q_mod.pop_rdma(qa, 3, promise=Promise.CR)
+    qb, got_b, out_b = q_mod.pop_rpc(qb, eng, 3)
+    a = np.sort(np.asarray(out_a[np.asarray(got_a)]).ravel())
+    b = np.sort(np.asarray(out_b[np.asarray(got_b)]).ravel())
+    np.testing.assert_array_equal(a, b)
+
+
+def test_queue_local_promise_zero_phases():
+    q = q_mod.make_queue(P, host=0, capacity=16, val_words=1)
+    q, ok = q_mod.push_local(q, jnp.arange(5, dtype=jnp.int32)[:, None])
+    assert bool(ok.all())
+    q, got, vals = q_mod.pop_local(q, 8)
+    assert int(got.sum()) == 5
+    np.testing.assert_array_equal(np.asarray(vals[:5, 0]), np.arange(5))

@@ -1,0 +1,198 @@
+"""Property-based tests (hypothesis) of the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am as am_mod
+from repro.core import costmodel as cm
+from repro.core import hashtable as ht_mod
+from repro.core import queue as q_mod
+from repro.core import window
+from repro.core.types import AmoKind, Backend, OpStats, Promise
+from repro.kernels import ref
+from repro.optim import compress_int8, decompress_int8
+
+SET = settings(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# AMO serialization: batched apply == some sequential order (linearizable),
+# and equal to the independently-written ref oracle under the same order.
+# ---------------------------------------------------------------------------
+@SET
+@given(st.data())
+def test_amo_apply_linearizable(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    L, m = 16, data.draw(st.integers(1, 24))
+    local = jnp.asarray(rng.integers(0, 50, (L,)), jnp.int32)
+    ops = np.zeros((m, 4), np.int32)
+    ops[:, 0] = rng.integers(0, L, m)
+    ops[:, 1] = rng.integers(0, 7, m)
+    ops[:, 2] = rng.integers(-4, 5, m)
+    ops[:, 3] = rng.integers(-4, 5, m)
+    mask = jnp.asarray(rng.random(m) > 0.2)
+    old, new = ref.amo_apply(local, jnp.asarray(ops), mask)
+    # python re-execution in the same serialized order
+    state = np.asarray(local).copy()
+    for j in range(m):
+        if not bool(mask[j]):
+            continue
+        o, code, a, b = ops[j]
+        cur = state[o]
+        if code == 0:
+            state[o] = b
+        elif code == 2:
+            state[o] = b if cur == a else cur
+        elif code == 3:
+            state[o] = cur + a
+        elif code == 4:
+            state[o] = cur | a
+        elif code == 5:
+            state[o] = cur & a
+        elif code == 6:
+            state[o] = cur ^ a
+        assert int(old[j]) == cur
+    np.testing.assert_array_equal(np.asarray(new), state)
+
+
+# ---------------------------------------------------------------------------
+# Hash table == python dict under random op streams, both backends
+# ---------------------------------------------------------------------------
+@SET
+@given(st.data())
+def test_hashtable_vs_dict(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    P = 2
+    nops = data.draw(st.integers(1, 4))
+    n = 4
+    ht_r = ht_mod.make_hashtable(P, 64, 1)
+    ht_p = ht_mod.make_hashtable(P, 64, 1)
+    eng = am_mod.AMEngine(P)
+    ht_mod.build_am_handlers(ht_p, eng)
+    oracle = {}
+    for _ in range(nops):
+        keys = rng.choice(np.arange(1, 40), size=P * n, replace=False)
+        keys = jnp.asarray(keys.reshape(P, n), jnp.int32)
+        vals = keys[..., None] * 3 + 1
+        new = ~np.isin(np.asarray(keys), list(oracle))
+        ht_r, ok_r, _ = ht_mod.insert_rdma(ht_r, keys, vals,
+                                           promise=Promise.CW,
+                                           valid=jnp.asarray(new),
+                                           max_probes=64)
+        ht_p, ok_p = ht_mod.insert_rpc(ht_p, eng, keys, vals,
+                                       valid=jnp.asarray(new))
+        for k in np.asarray(keys).ravel():
+            oracle[int(k)] = int(k) * 3 + 1
+        probe = jnp.asarray(
+            rng.integers(1, 45, (P, n)), jnp.int32)
+        ht_r, f_r, v_r = ht_mod.find_rdma(ht_r, probe, promise=Promise.CR,
+                                          max_probes=64)
+        f_p, v_p = ht_mod.find_rpc(ht_p, eng, probe)
+        for idx in np.ndindex(P, n):
+            k = int(probe[idx])
+            want = oracle.get(k)
+            for f, v in ((f_r, v_r), (f_p, v_p)):
+                if want is None:
+                    assert not bool(f[idx])
+                else:
+                    assert bool(f[idx]) and int(v[idx][0]) == want
+
+
+# ---------------------------------------------------------------------------
+# Queue FIFO + conservation under random push/pop batches
+# ---------------------------------------------------------------------------
+@SET
+@given(st.data())
+def test_queue_fifo_conservation(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    P = 2
+    q = q_mod.make_queue(P, host=0, capacity=256, val_words=1)
+    pushed, popped = [], []
+    counter = 1
+    for _ in range(data.draw(st.integers(1, 5))):
+        if rng.random() < 0.6:
+            n = int(rng.integers(1, 5))
+            vals = np.arange(counter, counter + P * n)
+            counter += P * n
+            q, ok = q_mod.push_rdma(
+                q, jnp.asarray(vals.reshape(P, n, 1), jnp.int32),
+                promise=Promise.CW)
+            pushed += list(vals[np.asarray(ok).ravel()])
+        else:
+            n = int(rng.integers(1, 5))
+            q, got, out = q_mod.pop_rdma(q, n, promise=Promise.CR)
+            popped += list(np.asarray(out[np.asarray(got)]).ravel())
+    q, got, out = q_mod.pop_rdma(q, 64, promise=Promise.CR)
+    popped += list(np.asarray(out[np.asarray(got)]).ravel())
+    assert sorted(popped) == sorted(pushed)        # conservation
+
+
+# ---------------------------------------------------------------------------
+# Cost model properties
+# ---------------------------------------------------------------------------
+@SET
+@given(st.sampled_from(list(cm.DSOp)),
+       st.floats(0.1, 10.0), st.floats(0.1, 10.0))
+def test_costmodel_promise_ordering(op, probes, contention):
+    """Stronger promises never cost less: C_RW >= phasal variant."""
+    s = OpStats(expected_probes=probes, contention=contention)
+    weak = {cm.DSOp.HT_INSERT: Promise.CW, cm.DSOp.HT_FIND: Promise.CR,
+            cm.DSOp.Q_PUSH: Promise.CW, cm.DSOp.Q_POP: Promise.CR}[op]
+    full = cm.predict(op, Promise.CRW, Backend.RDMA, s)
+    phasal = cm.predict(op, weak, Backend.RDMA, s)
+    assert full >= phasal
+
+
+@SET
+@given(st.floats(0.0, 50.0))
+def test_costmodel_attentiveness_monotone(busy):
+    s0 = OpStats(target_busy_us=busy)
+    s1 = OpStats(target_busy_us=busy + 1.0)
+    c0 = cm.predict(cm.DSOp.Q_PUSH, Promise.CW, Backend.RPC, s0)
+    c1 = cm.predict(cm.DSOp.Q_PUSH, Promise.CW, Backend.RPC, s1)
+    assert c1 >= c0
+    # RDMA is attentiveness-independent (paper Fig. 6)
+    r0 = cm.predict(cm.DSOp.Q_PUSH, Promise.CW, Backend.RDMA, s0)
+    r1 = cm.predict(cm.DSOp.Q_PUSH, Promise.CW, Backend.RDMA, s1)
+    assert r0 == r1
+
+
+def test_costmodel_network_phases_table():
+    assert cm.network_phases(cm.DSOp.HT_INSERT, Promise.CRW,
+                             Backend.RDMA) == 3
+    assert cm.network_phases(cm.DSOp.HT_INSERT, Promise.CW,
+                             Backend.RDMA) == 2
+    assert cm.network_phases(cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA) == 1
+    assert cm.network_phases(cm.DSOp.Q_PUSH, Promise.CL, Backend.RDMA) == 0
+    for op in cm.DSOp:
+        assert cm.network_phases(op, Promise.CRW, Backend.RPC) == 1
+
+
+@SET
+@given(st.integers(1, 10**7), st.integers(1, 10**5))
+def test_moe_chooser_consistent(tokens, expert_kb):
+    b = cm.choose_moe_backend(tokens_per_rank=tokens, d_model=1024,
+                              expert_bytes_per_rank=expert_kb * 1024)
+    rpc = cm.moe_dispatch_bytes(Backend.RPC, tokens_per_rank=tokens,
+                                d_model=1024,
+                                expert_bytes_per_rank=expert_kb * 1024)
+    rdma = cm.moe_dispatch_bytes(Backend.RDMA, tokens_per_rank=tokens,
+                                 d_model=1024,
+                                 expert_bytes_per_rank=expert_kb * 1024)
+    assert (b == Backend.RPC) == (rpc <= rdma)
+
+
+# ---------------------------------------------------------------------------
+# Compression round trip
+# ---------------------------------------------------------------------------
+@SET
+@given(st.data())
+def test_int8_compression_bounded_error(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    shape = data.draw(st.sampled_from([(64,), (33,), (16, 24), (3, 5, 7)]))
+    x = jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+    codes, scales = compress_int8(x)
+    y = decompress_int8(codes, scales, x.shape, x.dtype)
+    blockmax = float(jnp.abs(x).max())
+    assert float(jnp.abs(y - x).max()) <= blockmax / 127.0 + 1e-6

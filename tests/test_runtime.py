@@ -1,0 +1,121 @@
+"""Fault-tolerance substrate: checkpoint/restart, async write-behind,
+straggler policy, elastic re-scale, DS rehash."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashtable as ht_mod
+from repro.core.types import Promise
+from repro.runtime import checkpoint as ck
+from repro.runtime.elastic import rehash_table
+from repro.runtime.straggler import StragglerMonitor
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": [jnp.ones((5,), jnp.int32), jnp.zeros((2, 2))]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save_checkpoint(str(tmp_path), 7, t)
+    assert ck.latest_step(str(tmp_path)) == 7
+    t2 = ck.load_checkpoint(str(tmp_path), 7, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A .tmp (simulated mid-write crash) is never considered complete."""
+    t = _tree()
+    ck.save_checkpoint(str(tmp_path), 5, t)
+    (tmp_path / "step_9.tmp").mkdir()
+    (tmp_path / "step_9.tmp" / "leaf_0.npy").write_bytes(b"partial")
+    assert ck.latest_step(str(tmp_path)) == 5
+    ck.gc_checkpoints(str(tmp_path), keep=3)
+    assert not (tmp_path / "step_9.tmp").exists()
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save_checkpoint(str(tmp_path), s, t)
+    ck.gc_checkpoints(str(tmp_path), keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    assert not (tmp_path / "step_1").exists()
+    assert (tmp_path / "step_4").exists()
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    acp = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (10, 20):
+        acp.submit(s, t)
+    acp.wait()
+    acp.close()
+    assert ck.latest_step(str(tmp_path)) == 20
+    t2 = ck.load_checkpoint(str(tmp_path), 20, t)
+    np.testing.assert_array_equal(np.asarray(t2["a"]), np.asarray(t["a"]))
+
+
+def test_straggler_monitor_flags_slow_and_dead():
+    mon = StragglerMonitor(n_hosts=4, threshold=2.0, patience=2,
+                           dead_after=3)
+    for step in range(6):
+        for h in range(4):
+            if h == 3 and step >= 2:
+                continue                    # host 3 dies at step 2
+            dur = 1.0 if h != 1 else 5.0    # host 1 is slow
+            mon.heartbeat(h, step, dur)
+        mon.classify()
+    plan = mon.plan()
+    assert plan is not None
+    assert 3 in plan["evict"]
+    assert 1 in plan["evict"]
+    assert 0 in plan["survivors"] and 2 in plan["survivors"]
+
+
+def test_straggler_healthy_cluster_no_plan():
+    mon = StragglerMonitor(n_hosts=4)
+    for step in range(5):
+        for h in range(4):
+            mon.heartbeat(h, step, 1.0 + 0.01 * h)
+        mon.classify()
+    assert mon.plan() is None
+
+
+def test_elastic_rehash_preserves_contents():
+    """Shrink the DS layer 4 -> 2 virtual ranks: every live key survives."""
+    P = 4
+    keys = jnp.asarray(np.random.default_rng(0).permutation(5000)[
+        :P * 6].reshape(P, 6) + 1, jnp.int32)
+    vals = jnp.stack([keys * 2], axis=-1)
+    ht = ht_mod.make_hashtable(P, 64, 1)
+    ht, ok, _ = ht_mod.insert_rdma(ht, keys, vals, promise=Promise.CW)
+    assert bool(ok.all())
+    ht2 = rehash_table(ht, new_nranks=2)
+    assert ht2.nranks == 2
+    k2 = keys.reshape(2, -1)
+    ht2, found, got = ht_mod.find_rdma(ht2, k2, promise=Promise.CR,
+                                       max_probes=16)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(got[..., 0]),
+                                  np.asarray(k2 * 2))
+
+
+def test_train_restart_bit_exact(tmp_path):
+    """kill-and-restore: 6 straight steps == 3 steps + restart + 3 steps."""
+    from repro.launch import train as train_mod
+
+    base = ["--arch", "smollm-135m", "--reduced", "--batch", "4",
+            "--seq", "32", "--lr", "1e-3", "--total-steps", "6"]
+    l_straight = train_mod.main(base + ["--steps", "6"])
+    ck1 = str(tmp_path / "ck")
+    train_mod.main(base + ["--steps", "3", "--ckpt", ck1,
+                           "--ckpt-every", "3"])
+    l_resumed = train_mod.main(base + ["--steps", "6", "--ckpt", ck1,
+                                       "--ckpt-every", "100"])
+    np.testing.assert_allclose(l_straight[3:], l_resumed, rtol=1e-5)
