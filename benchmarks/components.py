@@ -15,6 +15,9 @@ Reproduces the paper's two qualitative findings structurally:
 """
 from __future__ import annotations
 
+import json
+import pathlib
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -22,6 +25,7 @@ import jax.numpy as jnp
 from repro.core import am as am_mod
 from repro.core import costmodel as cm
 from repro.core import hashtable as ht_mod
+from repro.core import routing
 from repro.core import window
 from repro.core.types import AmoKind
 
@@ -72,6 +76,39 @@ def bench_components(P: int = 8, n: int = 64, iters: int = 15):
             0, 8, round_, (w, jnp.ones((P, n), bool), cur))
         return w
 
+    # Fused component descriptors (DESIGN.md §2) — the claim+write,
+    # claim+write+publish, and lock+gather compound phases the hash table's
+    # fused hot path is built from, plus a planned persistent CAS showing
+    # route-plan reuse across rounds.
+    vals2 = jnp.ones((P, n, 2), jnp.int32)
+
+    def cas_put(w):
+        _, w = window.rdma_cas_put(w, dst, off, 0, 1, off + 1, vals2)
+        return w
+
+    def cas_put_pub(w):
+        _, w = window.rdma_cas_put_publish(w, dst, off, 0, 1, off + 1,
+                                           vals2, 3)
+        return w
+
+    def fao_get(w):
+        _, rec, w = window.rdma_fao_get(w, dst, off, 1, AmoKind.FAA, off, 3)
+        return w, rec
+
+    def cas_persistent_planned(w):
+        plan = routing.make_plan(dst, cap=n)
+
+        def round_(i, carry):
+            w, pending, cur = carry
+            old, w = window.rdma_cas(w, dst, zero_off, cur, cur + 1,
+                                     valid=pending, plan=plan)
+            done = pending & (old == cur)
+            return w, pending & ~done, old
+        cur = window.rdma_get(w, dst, zero_off, width=1, plan=plan)[..., 0]
+        w, pending, _ = jax.lax.fori_loop(
+            0, 8, round_, (w, jnp.ones((P, n), bool), cur))
+        return w
+
     # AM round trip: the inner operation is a remote hash-table insert
     # (matches the paper's AM benchmark).
     ht = ht_mod.make_hashtable(P, LOCAL, 1)
@@ -83,7 +120,7 @@ def bench_components(P: int = 8, n: int = 64, iters: int = 15):
     def am_rt(table):
         ht2 = ht_mod.DHashTable(win=window.Window(data=table),
                                 nslots=LOCAL, val_words=1)
-        ht3, ok = ht_mod.insert_rpc(ht2, eng, keys, keys[..., None])
+        ht3, ok, probes = ht_mod.insert_rpc(ht2, eng, keys, keys[..., None])
         return ht3.win.data
 
     rows = {}
@@ -95,6 +132,12 @@ def bench_components(P: int = 8, n: int = 64, iters: int = 15):
     rows["cas_single"] = time_op(cas, win, iters=iters, ops_per_call=ops)
     rows["cas_persistent"] = time_op(cas_persistent, win, iters=iters,
                                      ops_per_call=ops)
+    rows["cas_persistent_planned"] = time_op(cas_persistent_planned, win,
+                                             iters=iters, ops_per_call=ops)
+    rows["cas_put"] = time_op(cas_put, win, iters=iters, ops_per_call=ops)
+    rows["cas_put_pub"] = time_op(cas_put_pub, win, iters=iters,
+                                  ops_per_call=ops)
+    rows["fao_get"] = time_op(fao_get, win, iters=iters, ops_per_call=ops)
     rows["am_rt"] = time_op(am_rt, ht.win.data, iters=iters,
                             ops_per_call=ops)
     return rows
@@ -104,25 +147,86 @@ def calibrated_costs(rows) -> cm.ComponentCosts:
     return cm.calibrate({
         "W": rows["put"], "R": rows["get"], "A_cas": rows["cas_single"],
         "A_fao": rows["fad"], "am_rt": rows["am_rt"],
+        "A_cas_put": rows.get("cas_put"),
+        "A_cas_put_pub": rows.get("cas_put_pub"),
+        "A_fao_get": rows.get("fao_get"),
         "handler": 0.0,
     })
 
 
-def main(out="artifacts/bench"):
+# Fused-vs-unfused pairing: fused op -> (unfused component sequence) for the
+# machine-readable artifact.
+FUSED_PAIRS = {
+    "cas_put": ["cas_single", "put"],
+    "cas_put_pub": ["cas_single", "put", "fad"],
+    "fao_get": ["fad", "get"],
+    "cas_persistent_planned": ["cas_persistent"],
+}
+
+
+def emit_json(all_rows, out="artifacts/bench",
+              fname="BENCH_components.json"):
+    """Machine-readable per-op µs + exchange counts + fused-vs-unfused
+    ratios, for cross-PR perf trajectories (consumed by future CI)."""
+    from repro.core.types import Backend, Promise
+    report = {"benchmark": "components", "unit": "us_per_op",
+              "rows": {str(P): rows for P, rows in all_rows.items()},
+              "fused_vs_unfused": {}, "exchange_counts": {}}
+    for P, rows in all_rows.items():
+        pairs = {}
+        for fused_op, seq in FUSED_PAIRS.items():
+            if fused_op not in rows:
+                continue
+            unfused_us = sum(rows[c] for c in seq)
+            pairs[fused_op] = {
+                "fused_us": rows[fused_op],
+                "unfused_us": unfused_us,
+                "unfused_sequence": seq,
+                "speedup": unfused_us / rows[fused_op]
+                if rows[fused_op] else None,
+            }
+        report["fused_vs_unfused"][str(P)] = pairs
+    for fused in (False, True):
+        key = "fused" if fused else "unfused"
+        report["exchange_counts"][key] = {
+            "ht_find_crw_per_probe": cm.exchange_count(
+                cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA, fused=fused),
+            "ht_insert_crw_per_probe": cm.exchange_count(
+                cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA, fused=fused,
+                probes=1),
+            "network_phases_ht_insert_crw": cm.network_phases(
+                cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA, fused=fused),
+            "network_phases_ht_find_crw": cm.network_phases(
+                cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA, fused=fused),
+        }
+    p = pathlib.Path(out) / fname
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {p}")
+    return str(p)
+
+
+def main(out="artifacts/bench", ranks=(2, 4, 8, 16)):
     csv = Csv(["benchmark", "nranks", "op", "us_per_op"])
     all_rows = {}
-    for P in (2, 4, 8, 16):
+    for P in ranks:
         rows = bench_components(P=P)
         all_rows[P] = rows
         for op, us in rows.items():
             csv.add("components(fig3)", P, op, f"{us:.3f}")
     csv.dump(f"{out}/components.csv")
+    emit_json(all_rows, out=out)
     # structural findings (paper Fig. 3)
-    r = all_rows[8]
+    r = all_rows[8] if 8 in all_rows else all_rows[max(all_rows)]
     print(f"# persistent_cas/single_cas = "
           f"{r['cas_persistent']/r['cas_single']:.2f} (expect > 1)")
     print(f"# fad_single/fad = {r['fad_single']/r['fad']:.2f} "
           f"(expect >= 1; Aries pathology analogue)")
+    print(f"# fused cas_put vs cas+put: "
+          f"{(r['cas_single']+r['put'])/r['cas_put']:.2f}x")
+    print(f"# fused fao_get vs fad+get: "
+          f"{(r['fad']+r['get'])/r['fao_get']:.2f}x")
     return all_rows
 
 

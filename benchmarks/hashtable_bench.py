@@ -1,6 +1,15 @@
 """Paper Fig. 5: hash-table operation latencies — RDMA find C_R / C_RW,
-AM insert/find, RDMA insert C_RW / C_W — measured vs model prediction."""
+AM insert/find, RDMA insert C_RW / C_W — measured vs model prediction,
+for BOTH engines: the seed per-component path (fused=False) and the
+planned+fused path (fused=True, DESIGN.md §2). The `*_fused` columns
+re-validate the model's ordering claim against the faster engine.
+
+Run `python -m benchmarks.hashtable_bench --smoke` for the single-config
+(P=8, n=64) fused-vs-seed speedup check used by scripts/smoke.sh.
+"""
 from __future__ import annotations
+
+import sys
 
 import numpy as np
 import jax.numpy as jnp
@@ -33,29 +42,24 @@ def bench_hashtable(P: int = 8, n: int = 32, iters: int = 15):
         return ht_mod.DHashTable(win=window.Window(data=data),
                                  nslots=NSLOTS, val_words=2)
 
-    def insert_crw(data):
-        ht, _, _ = ht_mod.insert_rdma(wrap(data), keys, vals,
-                                      promise=Promise.CRW, max_probes=4)
-        return ht.win.data
-
-    def insert_cw(data):
-        ht, _, _ = ht_mod.insert_rdma(wrap(data), keys, vals,
-                                      promise=Promise.CW, max_probes=4)
-        return ht.win.data
+    def insert(promise, fused):
+        def fn(data):
+            ht, _, _ = ht_mod.insert_rdma(wrap(data), keys, vals,
+                                          promise=promise, max_probes=4,
+                                          fused=fused)
+            return ht.win.data
+        return fn
 
     def insert_am(data):
-        ht, _ = ht_mod.insert_rpc(wrap(data), eng, keys, vals)
+        ht, _, _ = ht_mod.insert_rpc(wrap(data), eng, keys, vals)
         return ht.win.data
 
-    def find_cr(data):
-        ht, f, v = ht_mod.find_rdma(wrap(data), keys, promise=Promise.CR,
-                                    max_probes=4)
-        return f, v
-
-    def find_crw(data):
-        ht, f, v = ht_mod.find_rdma(wrap(data), keys, promise=Promise.CRW,
-                                    max_probes=4)
-        return ht.win.data, f, v
+    def find(promise, fused):
+        def fn(data):
+            ht, f, v = ht_mod.find_rdma(wrap(data), keys, promise=promise,
+                                        max_probes=4, fused=fused)
+            return ht.win.data, f, v
+        return fn
 
     def find_am(data):
         return ht_mod.find_rpc(wrap(data), eng, keys)
@@ -63,29 +67,64 @@ def bench_hashtable(P: int = 8, n: int = 32, iters: int = 15):
     empty = base.win.data
     full = filled.win.data
     return {
-        "rdma_find_cr": time_op(find_cr, full, iters=iters,
+        "rdma_find_cr": time_op(find(Promise.CR, False), full, iters=iters,
                                 ops_per_call=ops),
+        "rdma_find_cr_fused": time_op(find(Promise.CR, True), full,
+                                      iters=iters, ops_per_call=ops),
         "am_find_crw": time_op(find_am, full, iters=iters,
                                ops_per_call=ops),
         "am_insert_crw": time_op(insert_am, empty, iters=iters,
                                  ops_per_call=ops),
-        "rdma_find_crw": time_op(find_crw, full, iters=iters,
-                                 ops_per_call=ops),
-        "rdma_insert_crw": time_op(insert_crw, empty, iters=iters,
-                                   ops_per_call=ops),
-        "rdma_insert_cw": time_op(insert_cw, empty, iters=iters,
-                                  ops_per_call=ops),
+        "rdma_find_crw": time_op(find(Promise.CRW, False), full,
+                                 iters=iters, ops_per_call=ops),
+        "rdma_find_crw_fused": time_op(find(Promise.CRW, True), full,
+                                       iters=iters, ops_per_call=ops),
+        "rdma_insert_crw": time_op(insert(Promise.CRW, False), empty,
+                                   iters=iters, ops_per_call=ops),
+        "rdma_insert_crw_fused": time_op(insert(Promise.CRW, True), empty,
+                                         iters=iters, ops_per_call=ops),
+        "rdma_insert_cw": time_op(insert(Promise.CW, False), empty,
+                                  iters=iters, ops_per_call=ops),
+        "rdma_insert_cw_fused": time_op(insert(Promise.CW, True), empty,
+                                        iters=iters, ops_per_call=ops),
     }
 
 
+# impl -> (op, promise, backend, fused)
 PRED = {
-    "rdma_find_cr": (cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA),
-    "rdma_find_crw": (cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA),
-    "am_find_crw": (cm.DSOp.HT_FIND, Promise.CRW, Backend.RPC),
-    "am_insert_crw": (cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC),
-    "rdma_insert_crw": (cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA),
-    "rdma_insert_cw": (cm.DSOp.HT_INSERT, Promise.CW, Backend.RDMA),
+    "rdma_find_cr": (cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA, False),
+    "rdma_find_cr_fused": (cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA, True),
+    "rdma_find_crw": (cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA, False),
+    "rdma_find_crw_fused": (cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA,
+                            True),
+    "am_find_crw": (cm.DSOp.HT_FIND, Promise.CRW, Backend.RPC, False),
+    "am_insert_crw": (cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC, False),
+    "rdma_insert_crw": (cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA,
+                        False),
+    "rdma_insert_crw_fused": (cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA,
+                              True),
+    "rdma_insert_cw": (cm.DSOp.HT_INSERT, Promise.CW, Backend.RDMA, False),
+    "rdma_insert_cw_fused": (cm.DSOp.HT_INSERT, Promise.CW, Backend.RDMA,
+                             True),
 }
+
+# fused impl -> its seed-engine counterpart (speedup accounting)
+SPEEDUP_PAIRS = {
+    "rdma_insert_crw_fused": "rdma_insert_crw",
+    "rdma_insert_cw_fused": "rdma_insert_cw",
+    "rdma_find_crw_fused": "rdma_find_crw",
+    "rdma_find_cr_fused": "rdma_find_cr",
+}
+
+
+def _predict(impl, params):
+    op, promise, backend, fused = PRED[impl]
+    return cm.predict(op, promise, backend, params=params, fused=fused)
+
+
+def fused_speedups(rows):
+    return {f: rows[u] / rows[f] for f, u in SPEEDUP_PAIRS.items()
+            if f in rows and u in rows and rows[f]}
 
 
 def main(out="artifacts/bench"):
@@ -95,8 +134,7 @@ def main(out="artifacts/bench"):
     params = components.calibrated_costs(comp)
     for P in (2, 4, 8):
         rows = bench_hashtable(P=P)
-        preds = {impl: cm.predict(*PRED[impl], params=params)
-                 for impl in rows}
+        preds = {impl: _predict(impl, params) for impl in rows}
         for impl, us in rows.items():
             csv.add("hashtable(fig5)", P, impl, f"{us:.3f}",
                     f"{preds[impl]:.3f}")
@@ -105,9 +143,27 @@ def main(out="artifacts/bench"):
         agree = sum(a == b for a, b in zip(m_order, p_order))
         print(f"# P={P} order agreement {agree}/{len(m_order)}: "
               f"measured {m_order}")
+        for f, s in fused_speedups(rows).items():
+            print(f"# P={P} {f} speedup over seed path: {s:.2f}x")
     csv.dump(f"{out}/hashtable.csv")
     return csv
 
 
+def smoke(P: int = 8, n: int = 64, iters: int = 9) -> bool:
+    """Acceptance config: fused+planned RDMA path vs the seed path at
+    P=8, n=64 — median speedup must be >= 1.3x on the hot ops."""
+    rows = bench_hashtable(P=P, n=n, iters=iters)
+    speedups = fused_speedups(rows)
+    for f, s in sorted(speedups.items()):
+        print(f"{f:28s} {rows[f]:8.3f} us  (seed {rows[SPEEDUP_PAIRS[f]]:8.3f}"
+              f" us)  speedup {s:.2f}x")
+    med = float(np.median(list(speedups.values())))
+    print(f"median fused/planned speedup at P={P}, n={n}: {med:.2f}x "
+          f"(target >= 1.3x)")
+    return med >= 1.3
+
+
 if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        sys.exit(0 if smoke() else 1)
     main()

@@ -1,5 +1,8 @@
 """Benchmark driver: one section per paper table/figure + the roofline
-report. Prints CSV; artifacts land in artifacts/bench/."""
+report. Prints CSV; artifacts land in artifacts/bench/, including the
+machine-readable artifacts/bench/BENCH_components.json (per-op µs,
+exchange counts, fused-vs-unfused speedups — the cross-PR perf
+trajectory; see also scripts/smoke.sh for the quick config)."""
 from __future__ import annotations
 
 import sys

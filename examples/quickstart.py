@@ -24,10 +24,11 @@ print(f"[rdma] fully-atomic insert: ok={bool(ok.all())} "
       f"on Cori Aries)")
 
 # RPC style: one active-message round trip, probing runs in the handler
+# (the reply carries the handler's real probe count)
 engine = am.AMEngine(P)
 table2 = ht.make_hashtable(P, nslots=128, val_words=1)
 ht.build_am_handlers(table2, engine)
-table2, ok2 = ht.insert_rpc(table2, engine, keys, vals)
+table2, ok2, probes2 = ht.insert_rpc(table2, engine, keys, vals)
 found, got = ht.find_rpc(table2, engine, keys)
 print(f"[rpc ] insert+find: ok={bool(ok2.all() and found.all())} "
       f"(cost model: {cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC):.1f} us)")

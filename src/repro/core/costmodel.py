@@ -25,7 +25,8 @@ from .types import Backend, OpStats, Promise
 
 @dataclass(frozen=True)
 class ComponentCosts:
-    """Latency (µs) of each component operation. Paper Table I notation."""
+    """Latency (µs) of each component operation. Paper Table I notation,
+    extended with the fused component descriptors of DESIGN.md §2."""
 
     W: float            # remote put
     R: float            # remote get
@@ -36,11 +37,30 @@ class ComponentCosts:
     local: float = 0.05         # ell: local push/pop
     amo_apply: float = 0.0      # owner-lane serialized-apply term (TPU only)
     pt_overhead: float = 1.35   # progress-thread contention factor (Fig. 6 PT)
+    # Fused component phases (None -> derived: the compound descriptor rides
+    # the atomic's two exchanges, so a fused op costs its atomic; the saved
+    # W / R / A_fao phases are the win). calibrate() overrides with measured
+    # numbers from benchmarks/components.py.
+    A_cas_put: Optional[float] = None      # claim + record write
+    A_cas_put_pub: Optional[float] = None  # claim + write + publish flip
+    A_fao_get: Optional[float] = None      # fetch-and-op + record gather
     name: str = "unnamed"
+
+    def fused_cas_put(self) -> float:
+        return self.A_cas if self.A_cas_put is None else self.A_cas_put
+
+    def fused_cas_put_pub(self) -> float:
+        return (self.A_cas if self.A_cas_put_pub is None
+                else self.A_cas_put_pub)
+
+    def fused_fao_get(self) -> float:
+        return self.A_fao if self.A_fao_get is None else self.A_fao_get
 
 
 # Paper Table I (Cori Phase I, Cray Aries, 64 nodes). am_rt from Fig. 3's AM
-# curve sitting between R and the persistent-CAS cluster.
+# curve sitting between R and the persistent-CAS cluster. Aries NICs have no
+# fused descriptors; the derived defaults model what Storm-style composite
+# ops would cost there.
 CORI_PHASE1 = ComponentCosts(W=3.0, R=3.7, A_cas=3.8, A_fao=3.9,
                              am_rt=5.0, handler=0.15, name="cori-aries")
 
@@ -77,8 +97,13 @@ def _rpc_cost(c: ComponentCosts, stats: OpStats) -> float:
 
 def predict(op: DSOp, promise: Promise, backend: Backend,
             stats: Optional[OpStats] = None,
-            params: ComponentCosts = CORI_PHASE1) -> float:
-    """Best-case per-op latency (µs) — the paper's Tables II/III formulas."""
+            params: ComponentCosts = CORI_PHASE1,
+            fused: bool = False) -> float:
+    """Best-case per-op latency (µs) — the paper's Tables II/III formulas.
+
+    fused=True prices the fused-descriptor engine (DESIGN.md §2): the
+    hash-table insert collapses to probes fused claim/write(/publish)
+    phases and the C_RW find's lock+get fuse into one A_FAO_GET pair."""
     s = stats or OpStats()
     c = params
     if backend == Backend.AUTO:
@@ -91,11 +116,17 @@ def predict(op: DSOp, promise: Promise, backend: Backend,
     amo = c.amo_apply
     if op == DSOp.HT_INSERT:
         if promise == Promise.CRW:      # (a) fully atomic: CAS + W + FAO
+            if fused:                   # probes × (claim+write+publish)
+                return probes * (c.fused_cas_put_pub() + amo)
             return probes * (c.A_cas + amo) + c.W + c.A_fao + amo
         if promise == Promise.CW:       # (b) phasal: CAS + W
+            if fused:                   # probes × (claim+write)
+                return probes * (c.fused_cas_put() + amo)
             return probes * (c.A_cas + amo) + c.W
     if op == DSOp.HT_FIND:
         if promise == Promise.CRW:      # (c) FAO + R + FAO (read lock/unlock)
+            if fused:                   # lock+get fused, then unlock
+                return (c.fused_fao_get() + amo) + (c.A_fao + amo)
             return (c.A_fao + amo) + c.R + (c.A_fao + amo)
         if promise == Promise.CR:       # (d) bare get
             return c.R
@@ -125,12 +156,15 @@ def predict_checksum_push(stats: Optional[OpStats] = None,
     return (c.A_fao + c.amo_apply) + c.W
 
 
-def network_phases(op: DSOp, promise: Promise, backend: Backend) -> int:
+def network_phases(op: DSOp, promise: Promise, backend: Backend,
+                   fused: bool = False) -> int:
     """Dependent network phases (== chained collectives in the lowered HLO).
 
     This is the structural invariant the dry-run cross-checks: an RDMA C_RW
     insert must show 3 dependent op phases (5 exchanges) where the RPC one
-    shows 1 (2 exchanges).
+    shows 1 (2 exchanges). With fused=True the fused engine's counts apply:
+    the C_RW insert's claim+write+publish is ONE phase and the C_RW find is
+    2 (fused lock+get, then unlock).
     """
     if backend == Backend.RPC:
         return 1
@@ -141,15 +175,64 @@ def network_phases(op: DSOp, promise: Promise, backend: Backend) -> int:
         (DSOp.Q_POP, Promise.CRW): 3, (DSOp.Q_POP, Promise.CR): 2,
         (DSOp.Q_PUSH, Promise.CL): 0, (DSOp.Q_POP, Promise.CL): 0,
     }
+    fused_table = {
+        (DSOp.HT_INSERT, Promise.CRW): 1, (DSOp.HT_INSERT, Promise.CW): 1,
+        (DSOp.HT_FIND, Promise.CRW): 2,
+    }
+    if fused and (op, promise) in fused_table:
+        return fused_table[(op, promise)]
+    return table[(op, promise)]
+
+
+# Exchanges per two-phase component op (request + reply) on the planned
+# engine; the one-time plan-occupancy exchange is accounted separately.
+PLAN_EXCHANGES = 1
+
+
+def exchange_count(op: DSOp, promise: Promise, backend: Backend,
+                   fused: bool = False, probes: int = 1) -> int:
+    """All-to-all exchanges issued by `routing.exchange` per batch — what
+    the roofline collective counter sees in the lowered HLO (excluding the
+    one PLAN_EXCHANGES occupancy exchange when fused/planned).
+
+    Unfused (route() per phase): a two-phase op costs 3 exchanges (request
+    payload + request occupancy mask + reply) and a put costs 2. Planned:
+    the occupancy mask was exchanged at plan time, so a two-phase op is 2
+    (request + reply) and a put is 1 — hence C_RW find drops from 9 to 4
+    per probe at the engine level, and from 6 to 4 in the paper's
+    phase-pair accounting.
+    """
+    if backend == Backend.RPC:
+        return 2 if fused else 3       # AM request (+mask) + reply
+    two, put = (2, 1) if fused else (3, 2)
+    # queue CRW counts assume one publish-CAS round (predict's cont=1
+    # best case); both queue FAO phases (reserve + failure return) count.
+    table = {
+        (DSOp.HT_INSERT, Promise.CRW):
+            probes * two if fused else probes * two + put + two,
+        (DSOp.HT_INSERT, Promise.CW):
+            probes * two if fused else probes * two + put,
+        (DSOp.HT_FIND, Promise.CRW):
+            probes * 2 * two if fused else probes * 3 * two,
+        (DSOp.HT_FIND, Promise.CR): probes * two,
+        (DSOp.Q_PUSH, Promise.CRW): two + two + put + two,
+        (DSOp.Q_PUSH, Promise.CW): two + two + put,
+        (DSOp.Q_POP, Promise.CRW): two + two + two + two,
+        (DSOp.Q_POP, Promise.CR): two + two + two,
+        (DSOp.Q_PUSH, Promise.CL): 0, (DSOp.Q_POP, Promise.CL): 0,
+    }
     return table[(op, promise)]
 
 
 def choose_backend(op: DSOp, promise: Promise,
                    stats: Optional[OpStats] = None,
-                   params: ComponentCosts = CORI_PHASE1) -> Backend:
-    """The paper operationalized: pick the cheaper style for this workload."""
+                   params: ComponentCosts = CORI_PHASE1,
+                   fused: bool = False) -> Backend:
+    """The paper operationalized: pick the cheaper style for this workload.
+    fused=True re-validates the choice against the fused/planned engine
+    (the RDMA side gets cheaper; RPC is already one round trip)."""
     s = stats or OpStats()
-    rdma = predict(op, promise, Backend.RDMA, s, params)
+    rdma = predict(op, promise, Backend.RDMA, s, params, fused=fused)
     rpc = predict(op, promise, Backend.RPC, s, params)
     return Backend.RDMA if rdma <= rpc else Backend.RPC
 
@@ -158,7 +241,8 @@ def calibrate(measured: Dict[str, float],
               base: ComponentCosts = CORI_PHASE1) -> ComponentCosts:
     """Build a parameter set from measured component latencies (µs).
 
-    Keys: any of W, R, A_cas, A_fao, am_rt, handler, local, amo_apply.
+    Keys: any of W, R, A_cas, A_fao, am_rt, handler, local, amo_apply,
+    A_cas_put, A_cas_put_pub, A_fao_get.
     """
     fields = {k: v for k, v in measured.items()
               if k in ComponentCosts.__dataclass_fields__}

@@ -32,10 +32,12 @@ import jax
 import jax.numpy as jnp
 
 from . import am as am_mod
+from . import routing
 from . import window as win_mod
 from .types import (FLAG_EMPTY, FLAG_READY, FLAG_RESERVED, READ_UNIT,
                     STATE_MASK, Backend, Promise)
-from .window import Window, rdma_cas, rdma_fao, rdma_get, rdma_put
+from .window import (Window, rdma_cas, rdma_cas_put, rdma_cas_put_publish,
+                     rdma_fao, rdma_fao_get, rdma_get, rdma_put)
 
 Array = jax.Array
 
@@ -84,12 +86,18 @@ def _place(ht: DHashTable, keys: Array) -> Tuple[Array, Array]:
 # ---------------------------------------------------------------------------
 def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
                 promise: Promise = Promise.CRW,
-                valid: Optional[Array] = None, max_probes: int = 8
-                ) -> Tuple[DHashTable, Array, Array]:
+                valid: Optional[Array] = None, max_probes: int = 8,
+                fused: bool = True) -> Tuple[DHashTable, Array, Array]:
     """Batched insert. keys (P, n) int32, vals (P, n, vw) int32.
 
     Returns (table', success (P,n), probe_count (P,n)). Distinct keys per
     batch assumed (open-addressing insert-only, see module docstring).
+
+    fused=True (default, DESIGN.md §2): one RoutePlan per batch + fused
+    claim/write(/publish) descriptors — each probe is ONE request phase and
+    the trailing W / A_FAO phases disappear. fused=False keeps the unfused
+    per-component phases (probes×A_CAS + W [+ A_FAO]); both paths are
+    bit-exact equivalent (tests/test_datastructures.py).
     """
     assert promise in (Promise.CRW, Promise.CW)
     if valid is None:
@@ -97,6 +105,42 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
     dst, start = _place(ht, keys)
     rec_w, nslots = ht.rec_w, ht.nslots
     claim_to = FLAG_RESERVED if promise == Promise.CRW else FLAG_READY
+
+    if fused:
+        plan = routing.make_plan(dst, valid, cap=keys.shape[1],
+                                 role="ht_insert")
+        payload = jnp.concatenate([keys[..., None], vals], axis=-1)
+        flip = int(FLAG_RESERVED) ^ int(FLAG_READY)
+
+        def probe_fused(carry):
+            j, win, active, claimed, probes = carry
+            slot = (start + j) % nslots
+            off = slot * rec_w
+            if promise == Promise.CRW:
+                old, win = rdma_cas_put_publish(
+                    win, dst, off, FLAG_EMPTY, claim_to, off + 1, payload,
+                    flip, valid=active, plan=plan)
+            else:
+                old, win = rdma_cas_put(
+                    win, dst, off, FLAG_EMPTY, claim_to, off + 1, payload,
+                    valid=active, plan=plan)
+            newly = active & (old == FLAG_EMPTY)
+            claimed = jnp.where(newly, slot, claimed)
+            probes = probes + active.astype(jnp.int32)
+            return j + 1, win, active & ~newly, claimed, probes
+
+        # Adaptive termination: once every op has claimed, the remaining
+        # probe phases are identities (all-inactive CAS batches change
+        # nothing), so skipping them at runtime is bit-exact. The unfused
+        # seed path keeps its fixed trip count.
+        claimed0 = jnp.full(keys.shape, -1, dtype=jnp.int32)
+        probes0 = jnp.zeros(keys.shape, dtype=jnp.int32)
+        _, win, active, claimed, probes = jax.lax.while_loop(
+            lambda c: (c[0] < max_probes) & c[2].any(), probe_fused,
+            (jnp.int32(0), ht.win, valid, claimed0, probes0))
+        success = valid & ~active
+        return (DHashTable(win=win, nslots=nslots, val_words=ht.val_words),
+                success, probes)
 
     def probe_phase(j, carry):
         win, active, claimed, probes = carry
@@ -120,7 +164,9 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
 
     if promise == Promise.CRW:
         # Flip RESERVED -> READY without touching reader bits: FXOR(1^2).
-        flip = jnp.full(keys.shape, int(FLAG_RESERVED ^ FLAG_READY),
+        # (python-level xor: staging it under jit would make the int() of
+        # the module constants a tracer)
+        flip = jnp.full(keys.shape, int(FLAG_RESERVED) ^ int(FLAG_READY),
                         dtype=jnp.int32)
         _, win = rdma_fao(win, dst, claimed * rec_w, flip,
                           win_mod.AmoKind.FXOR, valid=success)
@@ -130,35 +176,49 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
 
 def find_rdma(ht: DHashTable, keys: Array,
               promise: Promise = Promise.CR,
-              valid: Optional[Array] = None, max_probes: int = 8
-              ) -> Tuple[DHashTable, Array, Array]:
+              valid: Optional[Array] = None, max_probes: int = 8,
+              fused: bool = True) -> Tuple[DHashTable, Array, Array]:
     """Batched find. Returns (table', found (P,n), vals (P,n,vw)).
 
     C_R : one bare get per probe (flag+key+val in a single R).
     C_RW: read-lock (FAA +unit), get, unlock (FAA -unit) per probe.
+
+    fused=True (default): one RoutePlan per batch; for C_RW the read-lock
+    and record gather fuse into one A_FAO_GET request/reply pair, cutting a
+    probe from 6 exchanges to 4 (lock+get fused = 2, unlock = 2). The
+    gathered flag word may predate later locks in the batch, but the C_RW
+    hit test uses the lock's fetched state, so results are bit-exact with
+    fused=False.
     """
     assert promise in (Promise.CRW, Promise.CR)
     if valid is None:
         valid = jnp.ones(keys.shape, dtype=bool)
     dst, start = _place(ht, keys)
     rec_w, nslots, vw = ht.rec_w, ht.nslots, ht.val_words
+    plan = (routing.make_plan(dst, valid, cap=keys.shape[1], role="ht_find")
+            if fused else None)
 
-    def probe_phase(j, carry):
-        win, active, found, out = carry
+    def probe_body(j, win, active, found, out):
         slot = (start + j) % nslots
         off = slot * rec_w
         if promise == Promise.CRW:
             unit = jnp.full(keys.shape, int(READ_UNIT), dtype=jnp.int32)
-            old, win = rdma_fao(win, dst, off, unit, win_mod.AmoKind.FAA,
-                                valid=active)
-            state = old & STATE_MASK
-            lockable = active & (state == FLAG_READY)
-            rec = rdma_get(win, dst, off, rec_w, valid=lockable)
+            if fused:
+                old, rec, win = rdma_fao_get(
+                    win, dst, off, unit, win_mod.AmoKind.FAA, off, rec_w,
+                    valid=active, plan=plan)
+                state = old & STATE_MASK
+            else:
+                old, win = rdma_fao(win, dst, off, unit,
+                                    win_mod.AmoKind.FAA, valid=active)
+                state = old & STATE_MASK
+                lockable = active & (state == FLAG_READY)
+                rec = rdma_get(win, dst, off, rec_w, valid=lockable)
             _, win = rdma_fao(win, dst, off, -unit, win_mod.AmoKind.FAA,
-                              valid=active)
+                              valid=active, plan=plan)
             flag_state = state
         else:
-            rec = rdma_get(win, dst, off, rec_w, valid=active)
+            rec = rdma_get(win, dst, off, rec_w, valid=active, plan=plan)
             flag_state = rec[..., 0] & STATE_MASK
         hit = active & (flag_state == FLAG_READY) & (rec[..., 1] == keys)
         miss_end = active & (flag_state == FLAG_EMPTY)
@@ -169,8 +229,21 @@ def find_rdma(ht: DHashTable, keys: Array,
 
     found0 = jnp.zeros(keys.shape, dtype=bool)
     out0 = jnp.zeros(keys.shape + (vw,), dtype=jnp.int32)
-    win, _, found, out = jax.lax.fori_loop(
-        0, max_probes, probe_phase, (ht.win, valid, found0, out0))
+    if fused:
+        # Adaptive termination (see insert_rdma): an all-inactive probe is
+        # an identity, so stopping when every op resolved is bit-exact.
+        def probe_fused(carry):
+            j, win, active, found, out = carry
+            win, active, found, out = probe_body(j, win, active, found, out)
+            return j + 1, win, active, found, out
+
+        _, win, _, found, out = jax.lax.while_loop(
+            lambda c: (c[0] < max_probes) & c[2].any(), probe_fused,
+            (jnp.int32(0), ht.win, valid, found0, out0))
+    else:
+        win, _, found, out = jax.lax.fori_loop(
+            0, max_probes,
+            lambda j, c: probe_body(j, *c), (ht.win, valid, found0, out0))
     return (DHashTable(win=win, nslots=nslots, val_words=ht.val_words),
             found, out)
 
@@ -180,28 +253,33 @@ def find_rdma(ht: DHashTable, keys: Array,
 # ---------------------------------------------------------------------------
 def _probe_local(local: Array, key: Array, nslots: int, rec_w: int,
                  start: Array, max_probes: int, want_empty: bool):
-    """Shared probe loop over a local shard. Returns (slot, kind) where kind
-    0=miss, 1=found key, 2=empty slot (insertable if want_empty)."""
+    """Shared probe loop over a local shard. Returns (slot, kind, probes)
+    where kind 0=miss, 1=found key, 2=empty slot (insertable if want_empty)
+    and probes is the number of slots examined before the op decided — the
+    RPC-side stat comparable with the RDMA CAS-probe count."""
 
     def body(j, carry):
-        slot, kind = carry
+        slot, kind, probes = carry
         s = (start + j) % nslots
         rec0 = jax.lax.dynamic_slice(local, (s * rec_w,), (2,))
         state = rec0[0] & STATE_MASK
         is_hit = (state == FLAG_READY) & (rec0[1] == key)
         is_empty = state == FLAG_EMPTY
-        take_hit = (kind == 0) & is_hit
-        take_empty = (kind == 0) & is_empty & want_empty
-        stop_empty = (kind == 0) & is_empty & (not want_empty)
+        searching = kind == 0
+        take_hit = searching & is_hit
+        take_empty = searching & is_empty & want_empty
+        stop_empty = searching & is_empty & (not want_empty)
         kind = jnp.where(take_hit, 1, kind)
         kind = jnp.where(take_empty | stop_empty, jnp.where(take_empty, 2, 3),
                          kind)
         slot = jnp.where(take_hit | take_empty, s, slot)
-        return slot, kind
+        probes = probes + searching.astype(jnp.int32)
+        return slot, kind, probes
 
     slot0 = jnp.int32(-1)
     kind0 = jnp.int32(0)
-    return jax.lax.fori_loop(0, max_probes, body, (slot0, kind0))
+    return jax.lax.fori_loop(0, max_probes, body,
+                             (slot0, kind0, jnp.int32(0)))
 
 
 def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
@@ -216,11 +294,13 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
 
     def insert_fn(local, payload, mask):
         # payload: (m, 1 + 1 + vw) = [start | key | val...]
+        # reply (m, 2) = [ok | probes]
         def one(local, x):
             pay, ok = x
             start, key, val = pay[0], pay[1], pay[2:2 + vw]
-            slot, kind = _probe_local(local, key, nslots, rec_w, start,
-                                      max_probes, want_empty=True)
+            slot, kind, probes = _probe_local(local, key, nslots, rec_w,
+                                              start, max_probes,
+                                              want_empty=True)
             can = ok & (kind > 0) & (kind < 3)
             rec = jnp.concatenate([jnp.array([int(FLAG_READY), 0],
                                              dtype=jnp.int32), val])
@@ -229,7 +309,8 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
             cur = jax.lax.dynamic_slice(local, (base,), (rec_w,))
             new = jnp.where(can, rec, cur)
             local = jax.lax.dynamic_update_slice(local, new, (base,))
-            return local, can.astype(jnp.int32)[None]
+            return local, jnp.stack([can.astype(jnp.int32),
+                                     jnp.where(ok, probes, 0)])
 
         local2, replies = jax.lax.scan(one, local, (payload, mask))
         return local2, replies
@@ -238,8 +319,8 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
         # payload: (m, 2) = [start | key]; reply (m, 1 + vw) = [found | val]
         def one(pay):
             start, key = pay[0], pay[1]
-            slot, kind = _probe_local(local, key, nslots, rec_w, start,
-                                      max_probes, want_empty=False)
+            slot, kind, _ = _probe_local(local, key, nslots, rec_w, start,
+                                         max_probes, want_empty=False)
             hit = kind == 1
             base = jnp.where(hit, slot * rec_w, 0)
             rec = jax.lax.dynamic_slice(local, (base,), (rec_w,))
@@ -255,10 +336,10 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
     from ..kernels import ops as kops
 
     def insert_batched(data, flat, mask):
-        ok, data2 = kops.hash_insert(
+        ok, probes, data2 = kops.hash_insert(
             data, flat[..., 0], flat[..., 1], flat[..., 2:2 + vw], mask,
             nslots=nslots, rec_w=rec_w, max_probes=max_probes)
-        return data2, ok.astype(jnp.int32)[..., None]
+        return data2, jnp.stack([ok.astype(jnp.int32), probes], axis=-1)
 
     def find_batched(data, flat, mask):
         found, vals = kops.hash_find(
@@ -269,7 +350,7 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
         return data, reply
 
     use_batched = kops.use_pallas_default()
-    ins = engine.register("ht_insert", insert_fn, reply_width=1,
+    ins = engine.register("ht_insert", insert_fn, reply_width=2,
                           batched_fn=insert_batched if use_batched else None)
     fnd = engine.register("ht_find", find_fn, reply_width=1 + vw,
                           batched_fn=find_batched if use_batched else None)
@@ -278,8 +359,11 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
 
 def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
                vals: Array, valid: Optional[Array] = None
-               ) -> Tuple[DHashTable, Array]:
-    """Insert-or-assign via ONE AM round trip (cost: am_rt + handler)."""
+               ) -> Tuple[DHashTable, Array, Array]:
+    """Insert-or-assign via ONE AM round trip (cost: am_rt + handler).
+
+    Returns (table', ok, probes): probes is the handler's REAL probe count
+    carried in the reply word, so RDMA/RPC probe stats are comparable."""
     dst, start = _place(ht, keys)
     payload = jnp.concatenate([start[..., None], keys[..., None], vals],
                               axis=-1)
@@ -287,8 +371,9 @@ def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
     data, replies, delivered = engine.dispatch(h, ht.win.data, dst, payload,
                                                valid)
     ok = delivered & (replies[..., 0] > 0)
+    probes = jnp.where(delivered, replies[..., 1], 0)
     return (DHashTable(win=Window(data=data), nslots=ht.nslots,
-                       val_words=ht.val_words), ok)
+                       val_words=ht.val_words), ok, probes)
 
 
 def find_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
@@ -309,9 +394,7 @@ def find_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
 def insert(ht, keys, vals, *, promise=Promise.CRW, backend=Backend.RDMA,
            engine=None, **kw):
     if backend == Backend.RPC:
-        ht2, ok = insert_rpc(ht, engine, keys, vals,
-                             valid=kw.get("valid"))
-        return ht2, ok, jnp.ones_like(keys)
+        return insert_rpc(ht, engine, keys, vals, valid=kw.get("valid"))
     return insert_rdma(ht, keys, vals, promise=promise, **kw)
 
 

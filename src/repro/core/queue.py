@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from . import am as am_mod
+from . import routing
 from . import window as win_mod
 from .types import AmoKind, Backend, Promise
 from .window import Window, rdma_cas, rdma_fao, rdma_get, rdma_put
@@ -99,14 +100,19 @@ def _host_dst(q: DQueue, shape) -> Array:
 # RDMA backend — push
 # ---------------------------------------------------------------------------
 def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
-              valid: Optional[Array] = None, max_cas_rounds: int = 8
-              ) -> Tuple[DQueue, Array]:
+              valid: Optional[Array] = None, max_cas_rounds: int = 8,
+              planned: bool = True) -> Tuple[DQueue, Array]:
     """Batched push of vals (P, n, vw) onto the hosted ring buffer.
 
     Returns (queue', pushed (P, n) bool). Ops that would overflow the ring
     (reservation >= head_ready + capacity) are aborted by *returning* their
     reservation... which plain FAA cannot do — so, faithfully to BCL, the
     caller must size the ring; overflow slots wrap and are flagged failed.
+
+    planned=True (default): every component phase of the push — reserve
+    FAO, failure-return FAO, payload W, and the max_cas_rounds publish
+    CASes — reuses ONE RoutePlan (the host destination never changes), so
+    the whole op costs one routing sort instead of `max_cas_rounds + 3`.
     """
     assert promise in (Promise.CRW, Promise.CW)
     if valid is None:
@@ -116,12 +122,14 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
     dst = _host_dst(q, (P, n))
     use_csum = q.checksum and promise == Promise.CRW
     slot_w = q.slot_w
+    plan = (routing.make_plan(dst, valid, cap=n, role="q_push")
+            if planned else None)
 
     # Phase 1 — A_FAO: reserve space by advancing `tail`.
     one = jnp.ones((P, n), dtype=jnp.int32)
     off_tail = jnp.zeros((P, n), dtype=jnp.int32) + TAIL
     ticket, win = rdma_fao(q.win, dst, off_tail, one, AmoKind.FAA,
-                           valid=valid)
+                           valid=valid, plan=plan)
 
     # Ring-capacity check against head_ready (read is free at the host in
     # BCL's implementation via a cached local bound; we read our own cached
@@ -133,7 +141,7 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
     # last successful ticket + 1). One extra A_FAO on the failure path.
     neg = jnp.where(valid & ~ok, -1, 0)
     _, win = rdma_fao(win, dst, off_tail, neg, AmoKind.FAA,
-                      valid=valid & ~ok)
+                      valid=valid & ~ok, plan=plan)
 
     # Phase 2 — W: write the payload into the reserved slot.
     slot = ticket % q.capacity
@@ -147,7 +155,7 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
                                   axis=-1)
     else:
         payload = vals
-    win = rdma_put(win, dst, base, payload, valid=ok)
+    win = rdma_put(win, dst, base, payload, valid=ok, plan=plan)
 
     if promise == Promise.CRW and not use_csum:
         # Phase 3 — persistent CAS: advance tail_ready ticket -> ticket+1.
@@ -159,7 +167,7 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
         def round_(i, carry):
             win, pending = carry
             old, win = rdma_cas(win, dst, off_tr, ticket, ticket + 1,
-                                valid=pending)
+                                valid=pending, plan=plan)
             done = pending & (old == ticket)
             return win, pending & ~done
 
@@ -174,14 +182,16 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
 # RDMA backend — pop
 # ---------------------------------------------------------------------------
 def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
-             valid: Optional[Array] = None, max_cas_rounds: int = 8
-             ) -> Tuple[DQueue, Array, Array]:
+             valid: Optional[Array] = None, max_cas_rounds: int = 8,
+             planned: bool = True) -> Tuple[DQueue, Array, Array]:
     """Batched pop of up to n values per rank. Returns (q', got (P,n), vals).
 
     C_R : A_FAO (reserve head) + R (read slot). A barrier separates pops
           from pushes, so tail_ready == tail and no release CAS is needed.
     C_RW: A_FAO + R + persistent CAS advancing head_ready (release), and the
           reservation is validated against tail_ready.
+
+    planned=True: one RoutePlan shared by every phase (see push_rdma).
     """
     assert promise in (Promise.CRW, Promise.CR)
     P = q.nranks
@@ -189,11 +199,13 @@ def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
         valid = jnp.ones((P, n), dtype=bool)
     dst = _host_dst(q, (P, n))
     slot_w = q.slot_w
+    plan = (routing.make_plan(dst, valid, cap=n, role="q_pop")
+            if planned else None)
 
     one = jnp.ones((P, n), dtype=jnp.int32)
     off_head = jnp.zeros((P, n), dtype=jnp.int32) + HEAD
     ticket, win = rdma_fao(q.win, dst, off_head, one, AmoKind.FAA,
-                           valid=valid)
+                           valid=valid, plan=plan)
 
     # Bound check: may only read below the publish frontier. Checksum
     # queues read optimistically below `tail` and validate the in-payload
@@ -205,11 +217,11 @@ def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
     # not skipped by later pops.
     neg = jnp.where(valid & ~got, -1, 0)
     _, win = rdma_fao(win, dst, off_head, neg, AmoKind.FAA,
-                      valid=valid & ~got)
+                      valid=valid & ~got, plan=plan)
 
     slot = ticket % q.capacity
     base = CTRL_WORDS + slot * slot_w
-    rec = rdma_get(win, dst, base, slot_w, valid=got)
+    rec = rdma_get(win, dst, base, slot_w, valid=got, plan=plan)
     vals = rec[..., :q.val_words]
 
     if q.checksum and promise == Promise.CRW:
@@ -224,7 +236,7 @@ def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
         def round_(i, carry):
             win, pending = carry
             old, win = rdma_cas(win, dst, off_hr, ticket, ticket + 1,
-                                valid=pending)
+                                valid=pending, plan=plan)
             done = pending & (old == ticket)
             return win, pending & ~done
 

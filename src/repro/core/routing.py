@@ -152,6 +152,101 @@ class Routed:
     dropped: jax.Array
 
 
+# ---------------------------------------------------------------------------
+# Route plans: the routing computation (stable argsort + slot binning + the
+# owner-side occupancy exchange) factored out of the per-phase data path so
+# that a probe loop issuing `max_probes + 2` phases to the SAME destinations
+# pays for ONE sort instead of one per phase (DESIGN.md §2).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["dst_eff", "op_slot", "op_ok", "mask",
+                                "dropped"],
+                   meta_fields=["cap"])
+@dataclass
+class RoutePlan:
+    """A reusable (dst, slot) assignment for a batch of ops.
+
+    dst_eff: (P, n)  destination per op, invalid ops -> sentinel `nranks`
+    op_slot: (P, n)  slot within the destination bucket (raw rank in group;
+                     may be >= cap for capacity-dropped ops)
+    op_ok:   (P, n)  op was delivered (valid, in-capacity)
+    mask:    (P_owner, P_src, cap) owner-side occupancy, exchanged ONCE at
+             plan time; reused phases exchange only payload words
+    dropped: (P,)    per-origin capacity drops
+    cap:     static per-destination slot capacity
+    """
+
+    dst_eff: jax.Array
+    op_slot: jax.Array
+    op_ok: jax.Array
+    mask: jax.Array
+    dropped: jax.Array
+    cap: int
+
+    @property
+    def nranks(self) -> int:
+        return self.dst_eff.shape[0]
+
+
+def make_plan(dst: jax.Array, valid: Optional[jax.Array] = None,
+              cap: Optional[int] = None, role: str = "plan") -> RoutePlan:
+    """Compute the routing assignment for a batch (ONE stable argsort) and
+    exchange the occupancy mask (ONE exchange). Payload-only phases are then
+    issued against the plan with `route_with_plan`.
+
+    The binning is bin_by_dest itself (run with a zero-width payload), so
+    plan slots are bit-identical to route()'s by construction."""
+    nranks, n = dst.shape
+    cap = n if cap is None else cap
+    if valid is None:
+        valid = jnp.ones(dst.shape, dtype=bool)
+    empty = jnp.zeros(dst.shape + (0,), dtype=jnp.int32)
+    binned = jax.vmap(
+        lambda d, p, v: bin_by_dest(d, p, nranks, cap, v))(dst, empty, valid)
+    dst_eff = jnp.where(valid, dst, nranks)
+    mask_at_owner = exchange(binned.mask, role + "_mask")
+    return RoutePlan(dst_eff=dst_eff, op_slot=binned.op_slot,
+                     op_ok=binned.op_ok, mask=mask_at_owner,
+                     dropped=binned.dropped, cap=cap)
+
+
+def route_with_plan(plan: RoutePlan, payload: jax.Array,
+                    active: Optional[jax.Array] = None,
+                    role: str = "req") -> Routed:
+    """Issue one payload phase against a precomputed plan: a pure scatter
+    (no sort) + ONE exchange.
+
+    active, when given, must be a subset of the plan's valid mask; it is
+    ANDed into the plan's occupancy by riding along as one extra payload
+    word, so a shrinking probe-loop mask costs no extra exchange. Slot
+    assignments are the plan's: inactive ops leave holes instead of
+    compacting, which preserves the (src_rank, slot) serialization order of
+    the surviving ops — reuse is bit-exact (DESIGN.md §2).
+    """
+    nranks, n = plan.dst_eff.shape
+    cap = plan.cap
+    if active is not None:
+        payload = jnp.concatenate(
+            [payload, active.astype(payload.dtype)[..., None]], axis=-1)
+
+    def scatter_one(dst_eff_r, slot_r, pay_r):
+        buf = jnp.zeros((nranks, cap) + pay_r.shape[1:], dtype=pay_r.dtype)
+        # mode="drop" discards invalid (dst==nranks) and overflow (slot>=cap)
+        return buf.at[dst_eff_r, slot_r].set(pay_r, mode="drop")
+
+    buf = jax.vmap(scatter_one)(plan.dst_eff, plan.op_slot, payload)
+    at_owner = exchange(buf, role)                 # (P_owner, P_src, cap, W')
+    if active is not None:
+        mask = plan.mask & (at_owner[..., -1] != 0)
+        at_owner = at_owner[..., :-1]
+        op_ok = plan.op_ok & active
+    else:
+        mask = plan.mask
+        op_ok = plan.op_ok
+    return Routed(at_owner=at_owner, mask=mask, op_slot=plan.op_slot,
+                  op_ok=op_ok, dropped=plan.dropped)
+
+
 def route(dst: jax.Array, payload: jax.Array, cap: int,
           valid: Optional[jax.Array] = None, role: str = "req") -> Routed:
     """Route op batches from all P origins to their owners (one phase).
@@ -159,6 +254,10 @@ def route(dst: jax.Array, payload: jax.Array, cap: int,
     dst:     (P, n) destination ranks
     payload: (P, n, W) payload words
     valid:   (P, n) optional mask
+
+    One-shot path: plan + payload phase fused (the plan is not returned).
+    Loops issuing several phases to the same destinations should call
+    `make_plan` once and `route_with_plan` per phase instead.
     """
     nranks = dst.shape[0]
 

@@ -32,7 +32,13 @@ class Backend(enum.Enum):
 
 
 class AmoKind(enum.IntEnum):
-    """Fixed-function atomics. Integer codes shared with the Pallas kernel."""
+    """Fixed-function atomics. Integer codes shared with the Pallas kernel.
+
+    Codes 0-6 are the primitive single-word AMOs (one per network phase).
+    Codes 7-9 are FUSED component descriptors (DESIGN.md §2): one request
+    phase carries a compound op that the owner lane applies as a single
+    serialized step — the Active-Access / Storm-style composite remote op.
+    """
 
     PUT = 0    # unconditional store, returns previous value
     GET = 1    # read, no modification
@@ -41,6 +47,10 @@ class AmoKind(enum.IntEnum):
     FOR = 4    # fetch-and-or(a)
     FAND = 5   # fetch-and-and(a)
     FXOR = 6   # fetch-and-xor(a)
+    # Fused descriptors [off | kind | a | b | aux0 | aux1 | vals...]:
+    CAS_PUT = 7       # CAS(a->b) at off; on success put vals at aux0
+    CAS_PUT_PUB = 8   # CAS_PUT, then on success mem[off] ^= aux1 (publish)
+    FAO_GET = 9       # fetch-and-op(a, subkind b) at off; gather from aux0
 
 
 # Hash-table slot flag states (stored in the flag word of each slot).

@@ -169,24 +169,41 @@ def gather_local(local: Array, off: Array, width: int) -> Array:
 
 # ---------------------------------------------------------------------------
 # One-sided phases (the public RDMA-style API).
+#
+# Every phase accepts an optional precomputed RoutePlan (routing.make_plan):
+# probe loops that issue `max_probes + 2` phases to fixed destinations build
+# ONE plan per batch and each phase becomes a pure scatter + one exchange,
+# with the (possibly shrinking) `valid` mask ANDed into the plan occupancy —
+# bit-exact reuse (DESIGN.md §2).
 # ---------------------------------------------------------------------------
 def _default_cap(dst: Array, cap: Optional[int]) -> int:
     return dst.shape[1] if cap is None else cap
 
 
+def _route_phase(dst: Array, payload: Array, cap: int,
+                 valid: Optional[Array],
+                 plan: Optional[routing.RoutePlan],
+                 role: str) -> routing.Routed:
+    if plan is None:
+        return routing.route(dst, payload, cap, valid, role=role)
+    # valid=None -> active=None: reuse the plan occupancy as-is instead of
+    # shipping an all-ones activity word
+    return routing.route_with_plan(plan, payload, active=valid, role=role)
+
+
 def rdma_put(win: Window, dst: Array, off: Array, vals: Array,
-             valid: Optional[Array] = None, cap: Optional[int] = None
-             ) -> Window:
+             valid: Optional[Array] = None, cap: Optional[int] = None,
+             plan: Optional[routing.RoutePlan] = None) -> Window:
     """One-sided put: vals (P, n, V) written at word offsets off on rank dst.
 
     ONE network phase. Completion semantics: remote-complete at phase end
     (the paper's put is likewise only guaranteed complete at the next flush).
     """
-    cap = _default_cap(dst, cap)
+    cap = plan.cap if plan is not None else _default_cap(dst, cap)
     V = vals.shape[-1]
     payload = jnp.concatenate([off[..., None].astype(jnp.int32),
                                vals.astype(jnp.int32)], axis=-1)
-    routed = routing.route(dst, payload, cap, valid, role="put")
+    routed = _route_phase(dst, payload, cap, valid, plan, role="put")
     flat, mask = routing.flatten_owner_view(routed)
     offs, vwords = flat[..., 0], flat[..., 1:1 + V]
     new_data = jax.vmap(apply_put_local)(win.data, offs, vwords, mask)
@@ -194,12 +211,12 @@ def rdma_put(win: Window, dst: Array, off: Array, vals: Array,
 
 
 def rdma_get(win: Window, dst: Array, off: Array, width: int,
-             valid: Optional[Array] = None, cap: Optional[int] = None
-             ) -> Array:
+             valid: Optional[Array] = None, cap: Optional[int] = None,
+             plan: Optional[routing.RoutePlan] = None) -> Array:
     """One-sided get of `width` words: TWO exchanges (request, data back)."""
-    cap = _default_cap(dst, cap)
+    cap = plan.cap if plan is not None else _default_cap(dst, cap)
     payload = off[..., None].astype(jnp.int32)
-    routed = routing.route(dst, payload, cap, valid, role="get")
+    routed = _route_phase(dst, payload, cap, valid, plan, role="get")
     flat, mask = routing.flatten_owner_view(routed)
 
     def owner_gather(local, offs, m):
@@ -235,12 +252,14 @@ def _kernel_amo(data: Array, flat: Array, mask: Array, kind: int,
 
 def rdma_fao(win: Window, dst: Array, off: Array, operand: Array,
              kind: AmoKind, valid: Optional[Array] = None,
-             cap: Optional[int] = None) -> Tuple[Array, Window]:
+             cap: Optional[int] = None,
+             plan: Optional[routing.RoutePlan] = None
+             ) -> Tuple[Array, Window]:
     """Fetch-and-op (FAA/FOR/FAND/FXOR): TWO exchanges, serialized apply."""
-    cap = _default_cap(dst, cap)
+    cap = plan.cap if plan is not None else _default_cap(dst, cap)
     operand = jnp.broadcast_to(jnp.asarray(operand, jnp.int32), off.shape)
     payload = jnp.stack([off.astype(jnp.int32), operand], axis=-1)
-    routed = routing.route(dst, payload, cap, valid, role="fao")
+    routed = _route_phase(dst, payload, cap, valid, plan, role="fao")
     flat, mask = routing.flatten_owner_view(routed)
 
     def owner_apply(local, p, m):
@@ -258,14 +277,15 @@ def rdma_fao(win: Window, dst: Array, off: Array, operand: Array,
 
 
 def rdma_cas(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
-             valid: Optional[Array] = None, cap: Optional[int] = None
+             valid: Optional[Array] = None, cap: Optional[int] = None,
+             plan: Optional[routing.RoutePlan] = None
              ) -> Tuple[Array, Window]:
     """Compare-and-swap: TWO exchanges, serialized chained apply."""
-    cap = _default_cap(dst, cap)
+    cap = plan.cap if plan is not None else _default_cap(dst, cap)
     cmp = jnp.broadcast_to(jnp.asarray(cmp, jnp.int32), off.shape)
     new = jnp.broadcast_to(jnp.asarray(new, jnp.int32), off.shape)
     payload = jnp.stack([off.astype(jnp.int32), cmp, new], axis=-1)
-    routed = routing.route(dst, payload, cap, valid, role="cas")
+    routed = _route_phase(dst, payload, cap, valid, plan, role="cas")
     flat, mask = routing.flatten_owner_view(routed)
 
     def owner_apply(local, p, m):
@@ -280,3 +300,221 @@ def rdma_cas(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
                                            cap)
     old = routing.route_replies(routed, replies, dst, role="cas_rep")[..., 0]
     return old, Window(data=new_data)
+
+
+# ---------------------------------------------------------------------------
+# Fused component phases (DESIGN.md §2): composite one-phase remote ops in
+# the style of Storm's composite RTTs / Active Access compound descriptors.
+# Descriptor layout [off | kind | a | b | aux0 | aux1 | vals...]. The owner
+# applies the batch in SUB-PHASE order — atomics, compound puts, publish
+# flips, phase-end gathers, each serialized in (src_rank, slot) order —
+# i.e. exactly the order the unfused engine's separate phases would apply,
+# so fusion saves exchanges without changing observable state. The XLA lane
+# below composes the existing vectorized appliers per sub-phase; the Pallas
+# lane (kernels/ops.fused_apply) implements the same spec.
+# ---------------------------------------------------------------------------
+def _scatter_rows(local: Array, base: Array, vals: Array,
+                  mask: Array) -> Array:
+    """Scatter V-word rows at `base`, dropped whole when out of range.
+    Rows must be mutually disjoint (the caller's contract) — with no
+    overlaps a plain scatter IS the serialized last-writer-wins apply."""
+    L = local.shape[0]
+    V = vals.shape[-1]
+    ok = mask & (base >= 0) & (base <= L - V)
+    row = jnp.where(ok, base, L)[:, None] + jnp.arange(V)[None, :]
+    return local.at[row].set(vals, mode="drop")
+
+
+def apply_cas_put_local(local: Array, off: Array, cmp: Array, new: Array,
+                        put_off: Array, vals: Array, flip: Array,
+                        mask: Array) -> Tuple[Array, Array]:
+    """Vectorized owner apply for a CAS_PUT / CAS_PUT_PUB batch — the fused
+    hot path, ONE stable sort total (the seed path pays one per sub-phase):
+
+      1. chained CAS sub-phase in serialized order (sorted-segment scan);
+      2. winners' puts as one disjoint-row scatter (dropped whole when out
+         of range);
+      3. publish flips folded into the flag scatter: the post-CAS value at
+         each offset XOR the winners' flips (XOR order is immaterial).
+
+    flip=0 rows are plain CAS_PUT. Returns (old, local').
+
+    Preconditions (engine batches satisfy them by construction: new != cmp
+    so at most one winner per offset, winners claim distinct slots, put
+    rows are record words while CAS/flip targets are flag words): winners'
+    put rows are mutually disjoint and never cover other descriptors'
+    `off` words. The generic lanes (kernels/ref.fused_apply, the Pallas
+    kernel) are the spec for adversarial overlaps."""
+    L, V = local.shape[0], vals.shape[-1]
+    m = off.shape[0]
+    off_eff = jnp.where(mask, off, L)
+    order = jnp.argsort(off_eff, stable=True)
+    off_s, cmp_s, new_s = off_eff[order], cmp[order], new[order]
+    is_first = jnp.concatenate([jnp.array([True]), off_s[1:] != off_s[:-1]])
+    is_last = jnp.concatenate([off_s[1:] != off_s[:-1], jnp.array([True])])
+    init_vals = local.at[off_s].get(mode="fill", fill_value=0)
+
+    def step(carry, x):
+        prev_val = carry
+        first, init_v, c, nw = x
+        cur = jnp.where(first, init_v, prev_val)
+        nxt = jnp.where(cur == c, nw, cur)
+        return nxt, (cur, nxt)
+
+    _, (old_s, val_s) = jax.lax.scan(step, jnp.zeros((), local.dtype),
+                                     (is_first, init_vals, cmp_s, new_s))
+    win_s = old_s == cmp_s
+
+    # publish flips: segmented XOR of winners' flips, folded into the final
+    # flag value at each offset's last slot
+    flip_contrib = jnp.where(win_s, flip[order], 0)
+
+    def seg_xor(a, b):
+        a_flag, a_val = a
+        b_flag, b_val = b
+        return a_flag | b_flag, jnp.where(b_flag, b_val, a_val ^ b_val)
+
+    _, xor_incl = jax.lax.associative_scan(seg_xor, (is_first, flip_contrib))
+    flag_final = val_s ^ xor_incl
+    new_local = local.at[jnp.where(is_last, off_s, L)].set(flag_final,
+                                                           mode="drop")
+
+    old = jnp.zeros_like(old_s).at[order].set(old_s)
+    old = jnp.where(mask, old, 0)
+    win = mask & (old == cmp)
+    new_local = _scatter_rows(new_local, put_off, vals, win)
+    return old, new_local
+
+
+def apply_fao_get_local(local: Array, off: Array, operand: Array, kind: int,
+                        get_off: Array, width: int, mask: Array
+                        ) -> Tuple[Array, Array, Array]:
+    """Vectorized owner apply for a FAO_GET batch: serialized fetch-and-op
+    sub-phase (one stable sort + segmented combine), then a phase-end
+    gather of `width` words from get_off.
+    Returns (old, gathered (m, width), local')."""
+    L = local.shape[0]
+    binop, identity = _FAO_BINOPS[int(kind)]
+    ident = jnp.asarray(identity, dtype=local.dtype)
+    off_eff = jnp.where(mask, off, L)
+    operand_eff = jnp.where(mask, operand, ident)
+    order = jnp.argsort(off_eff, stable=True)
+    off_s, op_s = off_eff[order], operand_eff[order]
+    init_vals = local.at[off_s].get(mode="fill", fill_value=0)
+    old_s, final_s, is_last = _segmented_combine(off_s, op_s, init_vals,
+                                                 binop, ident)
+    new_local = local.at[jnp.where(is_last, off_s, L)].set(final_s,
+                                                           mode="drop")
+    old = jnp.zeros_like(old_s).at[order].set(old_s)
+    rec = gather_local(new_local, get_off, width)
+    return (jnp.where(mask, old, 0), jnp.where(mask[:, None], rec, 0),
+            new_local)
+
+
+def _fused_phase(win: Window, dst: Array, desc: Array, reply_width: int,
+                 valid: Optional[Array], cap: Optional[int],
+                 plan: Optional[routing.RoutePlan], role: str,
+                 xla_apply) -> Tuple[Array, Window]:
+    """Route one fused-descriptor phase and apply it at the owners.
+
+    xla_apply(data, flat, mask) -> (reply_flat, data') is the vectorized
+    XLA owner lane for this (homogeneous) descriptor batch; the Pallas lane
+    goes through the generic kernels/ops.fused_apply."""
+    cap = plan.cap if plan is not None else _default_cap(dst, cap)
+    routed = _route_phase(dst, desc, cap, valid, plan, role=role)
+    flat, mask = routing.flatten_owner_view(routed)
+    if _use_kernel_lane():
+        from ..kernels import ops as kops
+        reply_flat, new_data = kops.fused_apply(
+            win.data, flat, mask, reply_width=reply_width, use_pallas=True)
+    else:
+        reply_flat, new_data = xla_apply(win.data, flat, mask)
+    replies = routing.unflatten_owner_view(reply_flat, win.nranks, cap)
+    out = routing.route_replies(routed, replies, dst, role=role + "_rep")
+    return out, Window(data=new_data)
+
+
+def _desc(off: Array, kind: int, a: Array, b: Array, aux0: Array,
+          aux1: Array, vals: Optional[Array]) -> Array:
+    cols = [off.astype(jnp.int32),
+            jnp.full(off.shape, int(kind), jnp.int32),
+            jnp.broadcast_to(jnp.asarray(a, jnp.int32), off.shape),
+            jnp.broadcast_to(jnp.asarray(b, jnp.int32), off.shape),
+            jnp.broadcast_to(jnp.asarray(aux0, jnp.int32), off.shape),
+            jnp.broadcast_to(jnp.asarray(aux1, jnp.int32), off.shape)]
+    head = jnp.stack(cols, axis=-1)
+    if vals is None:
+        return head
+    return jnp.concatenate([head, vals.astype(jnp.int32)], axis=-1)
+
+
+def _cas_put_xla_apply(data, flat, mask):
+    V = flat.shape[-1] - 6
+
+    def one(local, p, m):
+        old, local2 = apply_cas_put_local(
+            local, p[:, 0], p[:, 2], p[:, 3], p[:, 4], p[:, 6:6 + V],
+            p[:, 5], m)
+        return old[:, None], local2
+
+    return jax.vmap(one)(data, flat, mask)
+
+
+def rdma_cas_put(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
+                 put_off: Array, vals: Array,
+                 valid: Optional[Array] = None, cap: Optional[int] = None,
+                 plan: Optional[routing.RoutePlan] = None
+                 ) -> Tuple[Array, Window]:
+    """Fused claim + record write: CAS(cmp->new) at `off`; on success the
+    V-word `vals` row lands at `put_off` — ONE request phase + reply (the
+    C_W insert's probes×A_CAS + W collapsed into probes×A_CAS_PUT).
+    Returns (old-at-off, win')."""
+    desc = _desc(off, AmoKind.CAS_PUT, cmp, new, put_off, 0, vals)
+    old, win2 = _fused_phase(win, dst, desc, 1, valid, cap, plan,
+                             role="cas_put", xla_apply=_cas_put_xla_apply)
+    return old[..., 0], win2
+
+
+def rdma_cas_put_publish(win: Window, dst: Array, off: Array, cmp: Array,
+                         new: Array, put_off: Array, vals: Array,
+                         flip: Array, valid: Optional[Array] = None,
+                         cap: Optional[int] = None,
+                         plan: Optional[routing.RoutePlan] = None
+                         ) -> Tuple[Array, Window]:
+    """Fused claim + record write + publish: CAS(cmp->new) at `off`; on
+    success write `vals` at `put_off` and flip mem[off] ^= `flip` — the
+    C_RW insert's three logical ops (A_CAS + W + A_FAO) in TWO exchanges.
+    Returns (old-at-off, win')."""
+    desc = _desc(off, AmoKind.CAS_PUT_PUB, cmp, new, put_off, flip, vals)
+    old, win2 = _fused_phase(win, dst, desc, 1, valid, cap, plan,
+                             role="cas_put_pub",
+                             xla_apply=_cas_put_xla_apply)
+    return old[..., 0], win2
+
+
+def rdma_fao_get(win: Window, dst: Array, off: Array, operand: Array,
+                 kind: AmoKind, get_off: Array, width: int,
+                 valid: Optional[Array] = None, cap: Optional[int] = None,
+                 plan: Optional[routing.RoutePlan] = None
+                 ) -> Tuple[Array, Array, Window]:
+    """Fused fetch-and-op + gather: apply FAO(`operand`, `kind`) at `off`
+    and return `width` words from `get_off` in the SAME request/reply pair —
+    the C_RW find's read-lock + record get (A_FAO + R, 4 exchanges) in 2.
+    The gather is a phase-end snapshot (it observes every atomic in the
+    batch, like the unfused engine's trailing get phase would).
+    Returns (old-at-off, gathered (P, n, width), win')."""
+    assert int(kind) in (int(AmoKind.FAA), int(AmoKind.FOR),
+                         int(AmoKind.FAND), int(AmoKind.FXOR))
+    desc = _desc(off, AmoKind.FAO_GET, operand, int(kind), get_off, 0, None)
+
+    def xla_apply(data, flat, mask):
+        def one(local, p, m):
+            old, rec, local2 = apply_fao_get_local(
+                local, p[:, 0], p[:, 2], int(kind), p[:, 4], width, m)
+            return jnp.concatenate([old[:, None], rec], axis=1), local2
+
+        return jax.vmap(one)(data, flat, mask)
+
+    reply, win2 = _fused_phase(win, dst, desc, 1 + width, valid, cap, plan,
+                               role="fao_get", xla_apply=xla_apply)
+    return reply[..., 0], reply[..., 1:], win2

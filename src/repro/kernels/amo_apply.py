@@ -7,11 +7,24 @@ atomics, so the owner executes the batch itself in deterministic
 (src_rank, slot) order. This kernel IS that serialization point; its cost
 is the `amo_apply` term in the cost model.
 
+Two kernels share the lane:
+
+- `amo_apply`: primitive single-word AMOs [off|opcode|a|b];
+- `fused_apply`: fused component descriptors (DESIGN.md §2)
+  [off|opcode|a|b|aux0|aux1|vals...] — CAS_PUT / CAS_PUT_PUB / FAO_GET
+  compound ops applied in sub-phase order (atomics, compound puts, publish
+  flips, phase-end gathers; each serialized), so a claim + record write +
+  publish flip arrives in ONE request phase instead of three.
+
 Grid: one program per owner row (the P axis); within a program a sequential
 fori_loop walks the op list — atomics are *inherently* serial at the memory
 controller, so the loop order is the semantics, not a perf bug. The local
 window lives in VMEM for the whole batch (one HBM read + one write total),
 which is the TPU-native win over per-op HBM round trips.
+
+Note on indexing: every `pl.load`/`pl.store` index is a `pl.ds` slice —
+mixing bare scalar ints into the index tuple breaks interpret-mode state
+discharge (`'int' object has no attribute 'shape'`).
 """
 from __future__ import annotations
 
@@ -22,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 OP_PUT, OP_GET, OP_CAS, OP_FAA, OP_FOR, OP_FAND, OP_FXOR = range(7)
+OP_CAS_PUT, OP_CAS_PUT_PUB, OP_FAO_GET = 7, 8, 9
 
 
 def _amo_kernel(local_ref, ops_ref, mask_ref, old_ref, out_ref):
@@ -34,15 +48,16 @@ def _amo_kernel(local_ref, ops_ref, mask_ref, old_ref, out_ref):
         off, code, a, b = op[0], op[1], op[2], op[3]
         ok = mask_ref[0, j] != 0
         safe = jnp.where(ok, off, 0)
-        cur = pl.load(out_ref, (0, pl.ds(safe, 1)))[0]
+        cur = pl.load(out_ref, (pl.ds(0, 1), pl.ds(safe, 1)))[0, 0]
         new = jnp.select(
             [code == OP_PUT, code == OP_GET, code == OP_CAS, code == OP_FAA,
              code == OP_FOR, code == OP_FAND, code == OP_FXOR],
             [b, cur, jnp.where(cur == a, b, cur), cur + a,
              cur | a, cur & a, cur ^ a], cur)
-        pl.store(out_ref, (0, pl.ds(safe, 1)),
-                 jnp.where(ok, new, cur)[None])
-        pl.store(old_ref, (0, pl.ds(j, 1)), jnp.where(ok, cur, 0)[None])
+        pl.store(out_ref, (pl.ds(0, 1), pl.ds(safe, 1)),
+                 jnp.where(ok, new, cur)[None, None])
+        pl.store(old_ref, (pl.ds(0, 1), pl.ds(j, 1)),
+                 jnp.where(ok, cur, 0)[None, None])
         return 0
 
     jax.lax.fori_loop(0, m, body, 0)
@@ -77,3 +92,134 @@ def amo_apply(local: jax.Array, ops: jax.Array, mask: jax.Array,
         interpret=interpret,
     )(local, ops, mask.astype(jnp.int32))
     return old, new_local
+
+
+def _fused_kernel(local_ref, ops_ref, mask_ref, reply_ref, out_ref,
+                  *, val_words, gather_words):
+    # local_ref: (1, L); ops_ref: (1, m, 6 + V); mask_ref: (1, m);
+    # reply_ref: (1, m, 1 + G); out_ref: (1, L)
+    #
+    # Sub-phase decomposed semantics (same spec as ref.fused_apply): one
+    # serialized pass per sub-phase — atomics, compound puts, publish
+    # flips, phase-end gathers.
+    out_ref[...] = local_ref[...]
+    m = ops_ref.shape[1]
+    L = local_ref.shape[1]
+    V, G = val_words, gather_words
+
+    def is_csp(code):
+        return (code == OP_CAS_PUT) | (code == OP_CAS_PUT_PUB)
+
+    def atomic_body(j, _):
+        op = ops_ref[0, j]
+        off, code, a, b = op[0], op[1], op[2], op[3]
+        ok = mask_ref[0, j] != 0
+        safe = jnp.where(ok, off, 0)
+        cur = pl.load(out_ref, (pl.ds(0, 1), pl.ds(safe, 1)))[0, 0]
+        win = cur == a
+        new = jnp.select(
+            [code == OP_PUT, code == OP_GET, code == OP_CAS, code == OP_FAA,
+             code == OP_FOR, code == OP_FAND, code == OP_FXOR,
+             is_csp(code),
+             code == OP_FAO_GET],
+            [b, cur, jnp.where(win, b, cur), cur + a,
+             cur | a, cur & a, cur ^ a,
+             jnp.where(win, b, cur),
+             jnp.select([b == OP_FAA, b == OP_FOR, b == OP_FAND,
+                         b == OP_FXOR],
+                        [cur + a, cur | a, cur & a, cur ^ a], cur)], cur)
+        pl.store(out_ref, (pl.ds(0, 1), pl.ds(safe, 1)),
+                 jnp.where(ok, new, cur)[None, None])
+        pl.store(reply_ref, (pl.ds(0, 1), pl.ds(j, 1), pl.ds(0, 1)),
+                 jnp.where(ok, cur, 0)[None, None, None])
+        return 0
+
+    jax.lax.fori_loop(0, m, atomic_body, 0)
+
+    def won(j):
+        # recompute CAS success from the recorded old value
+        op = ops_ref[0, j]
+        ok = mask_ref[0, j] != 0
+        old = pl.load(reply_ref, (pl.ds(0, 1), pl.ds(j, 1),
+                                  pl.ds(0, 1)))[0, 0, 0]
+        return ok & (old == op[2])
+
+    if V > 0:
+        def put_body(j, _):
+            op = ops_ref[0, j]
+            aux0 = op[4]
+            # compound payloads are dropped whole when out of range
+            do = (won(j) & is_csp(op[1])
+                  & (aux0 >= 0) & (aux0 <= L - V))
+            safe_put = jnp.where(do, aux0, 0)
+            cur_v = pl.load(out_ref, (pl.ds(0, 1), pl.ds(safe_put, V)))
+            vals = pl.load(ops_ref, (pl.ds(0, 1), pl.ds(j, 1),
+                                     pl.ds(6, V)))[0]
+            pl.store(out_ref, (pl.ds(0, 1), pl.ds(safe_put, V)),
+                     jnp.where(do, vals, cur_v))
+            return 0
+
+        jax.lax.fori_loop(0, m, put_body, 0)
+
+    def flip_body(j, _):
+        op = ops_ref[0, j]
+        do = won(j) & (op[1] == OP_CAS_PUT_PUB)
+        safe = jnp.where(do, op[0], 0)
+        cur = pl.load(out_ref, (pl.ds(0, 1), pl.ds(safe, 1)))[0, 0]
+        pl.store(out_ref, (pl.ds(0, 1), pl.ds(safe, 1)),
+                 jnp.where(do, cur ^ op[5], cur)[None, None])
+        return 0
+
+    jax.lax.fori_loop(0, m, flip_body, 0)
+
+    if G > 0:
+        def gather_body(j, _):
+            op = ops_ref[0, j]
+            aux0 = op[4]
+            ok = mask_ref[0, j] != 0
+            is_get = (ok & (op[1] == OP_FAO_GET)
+                      & (aux0 >= 0) & (aux0 <= L - G))
+            safe_get = jnp.where(is_get, aux0, 0)
+            g = pl.load(out_ref, (pl.ds(0, 1), pl.ds(safe_get, G)))
+            pl.store(reply_ref, (pl.ds(0, 1), pl.ds(j, 1), pl.ds(1, G)),
+                     jnp.where(is_get, g, 0)[:, None, :])
+            return 0
+
+        jax.lax.fori_loop(0, m, gather_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("reply_width", "interpret"))
+def fused_apply(local: jax.Array, ops: jax.Array, mask: jax.Array,
+                *, reply_width: int, interpret: bool = True):
+    """Apply serialized fused-descriptor batches to each owner's shard.
+
+    local (P, L) int32; ops (P, m, 6 + V) rows
+    [off|opcode|a|b|aux0|aux1|vals...]; mask (P, m).
+    Returns (reply (P, m, reply_width), local' (P, L)): reply word 0 is the
+    old value at `off`, words 1.. are the FAO_GET gather (zeros otherwise).
+    Same contract as kernels/ref.py:fused_apply, validated against it.
+    """
+    P, L = local.shape
+    m, w = ops.shape[1], ops.shape[2]
+    V = w - 6
+    G = reply_width - 1
+    kern = functools.partial(_fused_kernel, val_words=V, gather_words=G)
+    reply, new_local = pl.pallas_call(
+        kern,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, reply_width), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, m, reply_width), jnp.int32),
+            jax.ShapeDtypeStruct((P, L), jnp.int32),
+        ],
+        interpret=interpret,
+    )(local, ops, mask.astype(jnp.int32))
+    return reply, new_local

@@ -101,8 +101,11 @@ def _pad(x: jax.Array, to: int) -> jax.Array:
 
 
 def _insert_kernel(table_ref, starts_ref, keys_ref, vals_ref, mask_ref,
-                   ok_ref, out_ref, *, nslots, rec_w, max_probes):
-    # sequential insert-or-assign over the owner's request list
+                   ok_ref, probes_ref, out_ref, *, nslots, rec_w,
+                   max_probes):
+    # sequential insert-or-assign over the owner's request list. All
+    # pl.load/pl.store indices are pl.ds slices (bare scalar ints break
+    # interpret-mode state discharge).
     out_ref[...] = table_ref[...]
     m = starts_ref.shape[1]
     vw = rec_w - 2
@@ -113,25 +116,33 @@ def _insert_kernel(table_ref, starts_ref, keys_ref, vals_ref, mask_ref,
         ok = mask_ref[0, j] != 0
 
         def probe(p, carry):
-            slot, kind = carry  # kind: 0 searching, 1 hit, 2 empty
+            slot, kind, probes = carry  # kind: 0 searching, 1 hit, 2 empty
             s = (start + p) % nslots
-            rec = pl.load(out_ref, (0, pl.ds(s * rec_w, 2)))
+            rec = pl.load(out_ref, (pl.ds(0, 1), pl.ds(s * rec_w, 2)))[0]
             state = rec[0] & 255
-            hit = (kind == 0) & (state == 2) & (rec[1] == key)
-            empty = (kind == 0) & (state == 0)
+            searching = kind == 0
+            hit = searching & (state == 2) & (rec[1] == key)
+            empty = searching & (state == 0)
             slot = jnp.where(hit | empty, s, slot)
             kind = jnp.where(hit, 1, jnp.where(empty, 2, kind))
-            return slot, kind
+            probes = probes + searching.astype(jnp.int32)
+            return slot, kind, probes
 
-        slot, kind = jax.lax.fori_loop(0, max_probes, probe,
-                                       (jnp.int32(-1), jnp.int32(0)))
+        slot, kind, probes = jax.lax.fori_loop(
+            0, max_probes, probe, (jnp.int32(-1), jnp.int32(0),
+                                   jnp.int32(0)))
         can = ok & (kind > 0)
         base = jnp.where(can, slot * rec_w, 0)
-        cur = pl.load(out_ref, (0, pl.ds(base, rec_w)))
-        val = pl.load(vals_ref, (0, j, pl.ds(0, vw)))
+        cur = pl.load(out_ref, (pl.ds(0, 1), pl.ds(base, rec_w)))[0]
+        val = pl.load(vals_ref, (pl.ds(0, 1), pl.ds(j, 1),
+                                 pl.ds(0, vw)))[0, 0]
         rec = jnp.concatenate([jnp.full((1,), 2, jnp.int32), key[None], val])
-        pl.store(out_ref, (0, pl.ds(base, rec_w)), jnp.where(can, rec, cur))
-        pl.store(ok_ref, (0, pl.ds(j, 1)), can.astype(jnp.int32)[None])
+        pl.store(out_ref, (pl.ds(0, 1), pl.ds(base, rec_w)),
+                 jnp.where(can, rec, cur)[None])
+        pl.store(ok_ref, (pl.ds(0, 1), pl.ds(j, 1)),
+                 can.astype(jnp.int32)[None, None])
+        pl.store(probes_ref, (pl.ds(0, 1), pl.ds(j, 1)),
+                 jnp.where(ok, probes, 0)[None, None])
         return 0
 
     jax.lax.fori_loop(0, m, body, 0)
@@ -143,13 +154,13 @@ def hash_insert(table: jax.Array, starts: jax.Array, keys: jax.Array,
                 vals: jax.Array, mask: jax.Array, *, nslots: int,
                 rec_w: int, max_probes: int = 8, interpret: bool = True):
     """Serialized batched insert-or-assign. vals (P, m, rec_w-2).
-    Returns (ok (P, m) bool, table')."""
+    Returns (ok (P, m) bool, probes (P, m) int32, table')."""
     P, L = table.shape
     m = starts.shape[1]
     vw = rec_w - 2
     kern = functools.partial(_insert_kernel, nslots=nslots, rec_w=rec_w,
                              max_probes=max_probes)
-    ok, new_table = pl.pallas_call(
+    ok, probes, new_table = pl.pallas_call(
         kern,
         grid=(P,),
         in_specs=[
@@ -161,12 +172,14 @@ def hash_insert(table: jax.Array, starts: jax.Array, keys: jax.Array,
         ],
         out_specs=[
             pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
             pl.BlockSpec((1, L), lambda i: (i, 0)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((P, m), jnp.int32),
             jax.ShapeDtypeStruct((P, m), jnp.int32),
             jax.ShapeDtypeStruct((P, L), jnp.int32),
         ],
         interpret=interpret,
     )(table, starts, keys, vals, mask.astype(jnp.int32))
-    return ok != 0, new_table
+    return ok != 0, probes, new_table

@@ -43,6 +43,20 @@ def amo_apply(local: Array, ops: Array, mask: Array,
     return jax.vmap(ref.amo_apply)(local, ops, mask)
 
 
+def fused_apply(local: Array, ops: Array, mask: Array, *, reply_width: int,
+                use_pallas: bool | None = None) -> Tuple[Array, Array]:
+    """Owner-lane apply for fused component descriptors (DESIGN.md §2).
+    local (P, L); ops (P, m, 6+V); mask (P, m). Returns
+    (reply (P, m, reply_width), local'). The XLA lane is the sequential
+    oracle vmapped over owners; the Pallas lane is the VMEM-resident hot
+    path — bit-identical by contract (tests/test_kernels.py)."""
+    if _pick(use_pallas):
+        return _amo.fused_apply(local, ops, mask, reply_width=reply_width)
+    return jax.vmap(
+        lambda l, o, m: ref.fused_apply(l, o, m, reply_width=reply_width)
+    )(local, ops, mask)
+
+
 def hash_find(table, starts, keys, mask, *, nslots, rec_w, max_probes=8,
               use_pallas: bool | None = None):
     if _pick(use_pallas):
@@ -54,6 +68,8 @@ def hash_find(table, starts, keys, mask, *, nslots, rec_w, max_probes=8,
 
 def hash_insert(table, starts, keys, vals, mask, *, nslots, rec_w,
                 max_probes=8, use_pallas: bool | None = None):
+    """Returns (ok (P, m), probes (P, m), table') — probes is the number of
+    slots the handler examined, comparable with the RDMA CAS-probe count."""
     if _pick(use_pallas):
         return _hp.hash_insert(table, starts, keys, vals, mask,
                                nslots=nslots, rec_w=rec_w,

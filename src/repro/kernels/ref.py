@@ -16,6 +16,8 @@ Array = jax.Array
 # AMO opcodes — shared integer codes with kernels/amo_apply.py and
 # core.types.AmoKind.
 OP_PUT, OP_GET, OP_CAS, OP_FAA, OP_FOR, OP_FAND, OP_FXOR = range(7)
+# Fused descriptor opcodes (DESIGN.md §2): one request phase, compound apply.
+OP_CAS_PUT, OP_CAS_PUT_PUB, OP_FAO_GET = 7, 8, 9
 
 
 # ---------------------------------------------------------------------------
@@ -42,6 +44,93 @@ def amo_apply(local: Array, ops: Array, mask: Array
 
     local2, old = jax.lax.scan(step, local, (ops, mask))
     return old, local2
+
+
+def _fao(cur: Array, a: Array, code: Array) -> Array:
+    return jnp.select([code == OP_FAA, code == OP_FOR, code == OP_FAND,
+                       code == OP_FXOR],
+                      [cur + a, cur | a, cur & a, cur ^ a], cur)
+
+
+def fused_apply(local: Array, ops: Array, mask: Array, *, reply_width: int
+                ) -> Tuple[Array, Array]:
+    """Sequential oracle for the fused descriptor lane (DESIGN.md §2).
+
+    local (L,) int32; ops (m, 6 + V) int32 rows
+    [off, opcode, a, b, aux0, aux1, vals...]; mask (m,) bool.
+    Returns (reply (m, reply_width), local'). reply[:, 0] is the old value
+    at `off`; reply[:, 1:] is the gather result of FAO_GET ops (zeros for
+    other opcodes).
+
+    Semantics are SUB-PHASE decomposed — the fusion saves exchanges, not
+    serialization structure, so the owner applies the batch exactly as the
+    unfused engine would order its phases:
+
+      1. all atomic components, serialized in op order (CAS_PUT[_PUB]'s CAS,
+         FAO_GET's fetch-and-op with sub-kind `b`, primitive codes 0-6);
+      2. all compound V-word puts of winning CAS_PUT[_PUB] ops at aux0,
+         serialized (last writer wins), dropped whole when out of range;
+      3. all publish flips of winning CAS_PUT_PUB ops (mem[off] ^= aux1);
+      4. all FAO_GET gathers of G words from aux0 — a phase-end snapshot,
+         exactly what the unfused engine's trailing get phase would read.
+
+    Opcodes 0-6 behave as in `amo_apply` (vals/aux ignored), so
+    heterogeneous batches mixing primitive and fused descriptors are legal.
+    """
+    L = local.shape[0]
+    V = ops.shape[1] - 6
+    G = reply_width - 1
+
+    def atomic_step(local, x):
+        op, ok = x
+        off, code, a, b = op[0], op[1], op[2], op[3]
+        cur = local[off]
+        win = cur == a                         # CAS / CAS_PUT success
+        new = jnp.select(
+            [code == OP_PUT, code == OP_GET, code == OP_CAS, code == OP_FAA,
+             code == OP_FOR, code == OP_FAND, code == OP_FXOR,
+             (code == OP_CAS_PUT) | (code == OP_CAS_PUT_PUB),
+             code == OP_FAO_GET],
+            [b, cur, jnp.where(win, b, cur), cur + a,
+             cur | a, cur & a, cur ^ a,
+             jnp.where(win, b, cur),
+             _fao(cur, a, b)], cur)
+        local = local.at[off].set(jnp.where(ok, new, cur))
+        return local, (jnp.where(ok, cur, 0), ok & win)
+
+    local, (old, win) = jax.lax.scan(atomic_step, local, (ops, mask))
+
+    is_csp = ((ops[:, 1] == OP_CAS_PUT) | (ops[:, 1] == OP_CAS_PUT_PUB))
+    if V > 0:
+        do_put = (win & is_csp & (ops[:, 4] >= 0) & (ops[:, 4] <= L - V))
+
+        def put_step(local, x):
+            op, do = x
+            row = jnp.where(do, op[4], L) + jnp.arange(V)
+            return local.at[row].set(op[6:], mode="drop"), None
+
+        local, _ = jax.lax.scan(put_step, local, (ops, do_put))
+
+    do_flip = win & (ops[:, 1] == OP_CAS_PUT_PUB)
+
+    def flip_step(local, x):
+        op, do = x
+        off = op[0]
+        cur = local[off]
+        return local.at[off].set(jnp.where(do, cur ^ op[5], cur)), None
+
+    local, _ = jax.lax.scan(flip_step, local, (ops, do_flip))
+
+    if G > 0:
+        is_get = (mask & (ops[:, 1] == OP_FAO_GET)
+                  & (ops[:, 4] >= 0) & (ops[:, 4] <= L - G))
+        idx = (jnp.where(is_get, ops[:, 4], L)[:, None] + jnp.arange(G))
+        g = local.at[idx].get(mode="fill", fill_value=0)
+        reply = jnp.concatenate(
+            [old[:, None], jnp.where(is_get[:, None], g, 0)], axis=1)
+    else:
+        reply = old[:, None]
+    return reply, local
 
 
 # ---------------------------------------------------------------------------
@@ -77,37 +166,42 @@ def hash_find(table: Array, starts: Array, keys: Array, mask: Array,
 
 def hash_insert(table: Array, starts: Array, keys: Array, vals: Array,
                 mask: Array, nslots: int, rec_w: int, max_probes: int
-                ) -> Tuple[Array, Array]:
+                ) -> Tuple[Array, Array, Array]:
     """Sequential insert-or-assign oracle. vals (m, rec_w-2).
-    Returns (ok (m,), table')."""
+    Returns (ok (m,), probes (m,), table'). probes counts slots examined
+    until the op decided (hit/empty), max_probes on a full-table miss — the
+    RPC-side analogue of the RDMA backend's CAS-attempt count."""
     vw = rec_w - 2
 
     def step(table, x):
         start, key, val, ok = x
 
         def body(j, carry):
-            slot, kind = carry  # kind 0=searching 1=hit 2=empty
+            slot, kind, probes = carry  # kind 0=searching 1=hit 2=empty
             s = (start + j) % nslots
             rec = jax.lax.dynamic_slice(table, (s * rec_w,), (2,))
             state = rec[0] & 255
-            hit = (kind == 0) & (state == 2) & (rec[1] == key)
-            empty = (kind == 0) & (state == 0)
+            searching = kind == 0
+            hit = searching & (state == 2) & (rec[1] == key)
+            empty = searching & (state == 0)
             slot = jnp.where(hit | empty, s, slot)
             kind = jnp.where(hit, 1, jnp.where(empty, 2, kind))
-            return slot, kind
+            probes = probes + searching.astype(jnp.int32)
+            return slot, kind, probes
 
-        slot, kind = jax.lax.fori_loop(0, max_probes, body,
-                                       (jnp.int32(-1), jnp.int32(0)))
+        slot, kind, probes = jax.lax.fori_loop(
+            0, max_probes, body, (jnp.int32(-1), jnp.int32(0), jnp.int32(0)))
         can = ok & (kind > 0)
         rec = jnp.concatenate([jnp.array([2], jnp.int32), key[None], val])
         base = jnp.where(can, slot * rec_w, 0)
         cur = jax.lax.dynamic_slice(table, (base,), (rec_w,))
         table = jax.lax.dynamic_update_slice(
             table, jnp.where(can, rec, cur), (base,))
-        return table, can
+        return table, (can, jnp.where(ok, probes, 0))
 
-    table2, ok = jax.lax.scan(step, table, (starts, keys, vals, mask))
-    return ok, table2
+    table2, (ok, probes) = jax.lax.scan(step, table, (starts, keys, vals,
+                                                      mask))
+    return ok, probes, table2
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,67 @@ def test_reply_routing_aligns_with_op_order():
 
 
 # ---------------------------------------------------------------------------
+# Route plans (DESIGN.md §2): reuse is bit-exact vs a fresh route per phase
+# ---------------------------------------------------------------------------
+def test_route_plan_matches_fresh_route():
+    rng = np.random.default_rng(4)
+    dst = jnp.asarray(rng.integers(0, P, (P, 9)), jnp.int32)
+    payload = jnp.asarray(rng.integers(0, 100, (P, 9, 2)), jnp.int32)
+    fresh = routing.route(dst, payload, cap=9)
+    plan = routing.make_plan(dst, cap=9)
+    planned = routing.route_with_plan(plan, payload)
+    np.testing.assert_array_equal(np.asarray(fresh.at_owner),
+                                  np.asarray(planned.at_owner))
+    np.testing.assert_array_equal(np.asarray(fresh.mask),
+                                  np.asarray(planned.mask))
+    np.testing.assert_array_equal(np.asarray(fresh.op_slot),
+                                  np.asarray(planned.op_slot))
+    np.testing.assert_array_equal(np.asarray(fresh.op_ok),
+                                  np.asarray(planned.op_ok))
+
+
+def test_route_plan_shrinking_active_masks_out_ops():
+    """A shrinking probe-loop mask ANDs into the plan occupancy: inactive
+    ops vanish from the owner view but active ops keep their (src, slot)
+    serialization positions."""
+    rng = np.random.default_rng(5)
+    dst = jnp.asarray(rng.integers(0, P, (P, 8)), jnp.int32)
+    payload = jnp.asarray(rng.integers(1, 100, (P, 8, 1)), jnp.int32)
+    active = jnp.asarray(rng.random((P, 8)) > 0.5)
+    plan = routing.make_plan(dst, cap=8)
+    planned = routing.route_with_plan(plan, payload, active=active)
+    # owner view contains exactly the active payload words
+    flat, mask = routing.flatten_owner_view(planned)
+    got = np.sort(np.asarray(flat[np.asarray(mask)])[:, 0])
+    want = np.sort(np.asarray(payload[..., 0])[np.asarray(active)].ravel())
+    np.testing.assert_array_equal(got, want)
+    # active ops occupy the same slots as in the full-batch plan
+    np.testing.assert_array_equal(np.asarray(planned.op_slot),
+                                  np.asarray(plan.op_slot))
+    np.testing.assert_array_equal(
+        np.asarray(planned.op_ok), np.asarray(plan.op_ok & active))
+
+
+def test_planned_fao_matches_unplanned_under_shrinking_mask():
+    rng = np.random.default_rng(6)
+    dst = jnp.asarray(rng.integers(0, P, (P, 6)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 16, (P, 6)), jnp.int32)
+    masks = [jnp.asarray(rng.random((P, 6)) > t) for t in (0.0, 0.4, 0.8)]
+    win_a = window.make_window(P, 16)
+    win_b = window.make_window(P, 16)
+    plan = routing.make_plan(dst, cap=6)
+    for m in masks:
+        old_a, win_a = window.rdma_fao(win_a, dst, off, 1, AmoKind.FAA,
+                                       valid=m)
+        old_b, win_b = window.rdma_fao(win_b, dst, off, 1, AmoKind.FAA,
+                                       valid=m, plan=plan)
+        np.testing.assert_array_equal(
+            np.asarray(old_a)[np.asarray(m)], np.asarray(old_b)[np.asarray(m)])
+        np.testing.assert_array_equal(np.asarray(win_a.data),
+                                      np.asarray(win_b.data))
+
+
+# ---------------------------------------------------------------------------
 # One-sided AMOs
 # ---------------------------------------------------------------------------
 def test_faa_tickets_are_unique_and_dense():
@@ -98,22 +159,28 @@ def test_fao_variants_match_numpy():
 # ---------------------------------------------------------------------------
 # Hash table
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused", [False, True])
 @pytest.mark.parametrize("backend", ["rdma_crw", "rdma_cw", "rpc"])
-def test_hashtable_insert_find_roundtrip(backend):
+def test_hashtable_insert_find_roundtrip(backend, fused):
     rng = np.random.default_rng(3)
     keys = jnp.asarray(rng.permutation(10000)[:P * 8].reshape(P, 8) + 1,
                        jnp.int32)
     vals = jnp.stack([keys * 2, keys + 5], axis=-1)
     ht = ht_mod.make_hashtable(P, 64, 2)
     if backend == "rpc":
+        if fused:
+            pytest.skip("no fused variant of the RPC path")
         eng = am_mod.AMEngine(P)
         ht_mod.build_am_handlers(ht, eng)
-        ht, ok = ht_mod.insert_rpc(ht, eng, keys, vals)
+        ht, ok, probes = ht_mod.insert_rpc(ht, eng, keys, vals)
+        assert bool((probes[np.asarray(ok)] >= 1).all())
         found, got = ht_mod.find_rpc(ht, eng, keys)
     else:
         promise = Promise.CRW if backend == "rdma_crw" else Promise.CW
-        ht, ok, probes = ht_mod.insert_rdma(ht, keys, vals, promise=promise)
-        ht, found, got = ht_mod.find_rdma(ht, keys, promise=Promise.CR)
+        ht, ok, probes = ht_mod.insert_rdma(ht, keys, vals, promise=promise,
+                                            fused=fused)
+        ht, found, got = ht_mod.find_rdma(ht, keys, promise=Promise.CR,
+                                          fused=fused)
     assert bool(ok.all()) and bool(found.all())
     np.testing.assert_array_equal(np.asarray(got[..., 0]),
                                   np.asarray(keys * 2))
@@ -122,16 +189,19 @@ def test_hashtable_insert_find_roundtrip(backend):
         found2, _ = ht_mod.find_rpc(ht, eng, keys + 100000)
     else:
         ht, found2, _ = ht_mod.find_rdma(ht, keys + 100000,
-                                         promise=Promise.CR)
+                                         promise=Promise.CR, fused=fused)
     assert not bool(found2.any())
 
 
-def test_hashtable_crw_find_with_lock():
+@pytest.mark.parametrize("fused", [False, True])
+def test_hashtable_crw_find_with_lock(fused):
     keys = jnp.arange(P * 4, dtype=jnp.int32).reshape(P, 4) + 1
     vals = jnp.stack([keys, keys], axis=-1)
     ht = ht_mod.make_hashtable(P, 32, 2)
-    ht, ok, _ = ht_mod.insert_rdma(ht, keys, vals, promise=Promise.CRW)
-    ht, found, got = ht_mod.find_rdma(ht, keys, promise=Promise.CRW)
+    ht, ok, _ = ht_mod.insert_rdma(ht, keys, vals, promise=Promise.CRW,
+                                   fused=fused)
+    ht, found, got = ht_mod.find_rdma(ht, keys, promise=Promise.CRW,
+                                      fused=fused)
     assert bool(found.all())
     # read locks fully released: flag state back to READY with no readers
     recs = ht.win.data.reshape(P, ht.nslots, ht.rec_w)
@@ -145,12 +215,105 @@ def test_hashtable_rpc_insert_or_assign_updates():
     ht = ht_mod.make_hashtable(P, 32, 1)
     ht_mod.build_am_handlers(ht, eng)
     keys = jnp.arange(P * 2, dtype=jnp.int32).reshape(P, 2) + 1
-    ht, ok1 = ht_mod.insert_rpc(ht, eng, keys, keys[..., None] * 10)
-    ht, ok2 = ht_mod.insert_rpc(ht, eng, keys, keys[..., None] * 20)
+    ht, ok1, _ = ht_mod.insert_rpc(ht, eng, keys, keys[..., None] * 10)
+    ht, ok2, _ = ht_mod.insert_rpc(ht, eng, keys, keys[..., None] * 20)
     assert bool(ok1.all()) and bool(ok2.all())
     found, got = ht_mod.find_rpc(ht, eng, keys)
     np.testing.assert_array_equal(np.asarray(got[..., 0]),
                                   np.asarray(keys * 20))
+
+
+# ---------------------------------------------------------------------------
+# Fused component phases: bit-exact vs the unfused per-component sequences,
+# and the exchange counts the cost model promises
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("promise", [Promise.CRW, Promise.CW])
+def test_fused_insert_bit_exact_vs_unfused(promise):
+    """Fused claim/write(/publish) == CAS + W (+ FXOR) on a contended batch
+    (many keys collide into few slots, so probe chains interleave)."""
+    rng = np.random.default_rng(8)
+    keys = jnp.asarray(rng.permutation(4000)[:P * 8].reshape(P, 8) + 1,
+                       jnp.int32)
+    vals = jnp.stack([keys * 3, keys - 7], axis=-1)
+    ht_a = ht_mod.make_hashtable(P, 8, 2)    # tiny table -> contention
+    ht_b = ht_mod.make_hashtable(P, 8, 2)
+    ht_a, ok_a, pr_a = ht_mod.insert_rdma(ht_a, keys, vals, promise=promise,
+                                          max_probes=8, fused=False)
+    ht_b, ok_b, pr_b = ht_mod.insert_rdma(ht_b, keys, vals, promise=promise,
+                                          max_probes=8, fused=True)
+    np.testing.assert_array_equal(np.asarray(ht_a.win.data),
+                                  np.asarray(ht_b.win.data))
+    np.testing.assert_array_equal(np.asarray(ok_a), np.asarray(ok_b))
+    np.testing.assert_array_equal(np.asarray(pr_a), np.asarray(pr_b))
+
+
+@pytest.mark.parametrize("promise", [Promise.CR, Promise.CRW])
+def test_fused_find_bit_exact_vs_unfused(promise):
+    rng = np.random.default_rng(9)
+    keys = jnp.asarray(rng.permutation(4000)[:P * 6].reshape(P, 6) + 1,
+                       jnp.int32)
+    vals = jnp.stack([keys, keys * 2], axis=-1)
+    ht = ht_mod.make_hashtable(P, 16, 2)
+    ht, ok, _ = ht_mod.insert_rdma(ht, keys, vals, promise=Promise.CRW)
+    probe = jnp.where(jnp.arange(P * 6).reshape(P, 6) % 2 == 0, keys,
+                      keys + 100000)   # mix of hits and misses
+    ht_a, f_a, v_a = ht_mod.find_rdma(ht, probe, promise=promise,
+                                      fused=False)
+    ht_b, f_b, v_b = ht_mod.find_rdma(ht, probe, promise=promise,
+                                      fused=True)
+    np.testing.assert_array_equal(np.asarray(f_a), np.asarray(f_b))
+    np.testing.assert_array_equal(np.asarray(v_a), np.asarray(v_b))
+    np.testing.assert_array_equal(np.asarray(ht_a.win.data),
+                                  np.asarray(ht_b.win.data))
+
+
+def _count_exchanges(fn):
+    """Run fn under a sharding hook that counts routing.exchange calls."""
+    count = [0]
+
+    def hook(x, role):
+        if role.endswith("_pre"):
+            count[0] += 1
+        return x
+
+    with routing.sharding_hook(hook):
+        jax.block_until_ready(fn())
+    return count[0]
+
+
+def test_exchange_counts_agree_with_costmodel():
+    """The engine's actual all-to-all count matches costmodel.exchange_count
+    — the roofline collective counter and the model see the same phase
+    structure (C_RW find: 4 exchanges/probe fused, was 9 engine-level /
+    6 paper-level)."""
+    from repro.core import costmodel as cm
+    from repro.core.types import Backend
+    keys = jnp.arange(P * 4, dtype=jnp.int32).reshape(P, 4) + 1
+    vals = jnp.stack([keys, keys], axis=-1)
+    ht, _, _ = ht_mod.insert_rdma(ht_mod.make_hashtable(P, 32, 2), keys,
+                                  vals, promise=Promise.CRW)
+
+    for fused in (False, True):
+        got = _count_exchanges(lambda: ht_mod.find_rdma(
+            ht, keys, promise=Promise.CRW, max_probes=1,
+            fused=fused)[1])
+        want = cm.exchange_count(cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA,
+                                 fused=fused, probes=1)
+        if fused:
+            want += cm.PLAN_EXCHANGES
+        assert got == want, (fused, got, want)
+    assert cm.exchange_count(cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA,
+                             fused=True) <= 4
+
+    for fused in (False, True):
+        got = _count_exchanges(lambda: ht_mod.insert_rdma(
+            ht_mod.make_hashtable(P, 32, 2), keys, vals,
+            promise=Promise.CRW, max_probes=1, fused=fused)[0].win.data)
+        want = cm.exchange_count(cm.DSOp.HT_INSERT, Promise.CRW,
+                                 Backend.RDMA, fused=fused, probes=1)
+        if fused:
+            want += cm.PLAN_EXCHANGES
+        assert got == want, (fused, got, want)
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +365,30 @@ def test_queue_rpc_matches_rdma():
     a = np.sort(np.asarray(out_a[np.asarray(got_a)]).ravel())
     b = np.sort(np.asarray(out_b[np.asarray(got_b)]).ravel())
     np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("promise", [Promise.CRW, Promise.CW])
+def test_queue_planned_bit_exact_vs_unplanned(promise):
+    """One RoutePlan across the push/pop component phases == fresh routing
+    per phase (delivered ops and final ring state identical)."""
+    vals = jnp.arange(P * 5, dtype=jnp.int32).reshape(P, 5, 1) + 1
+    qa = q_mod.make_queue(P, host=1, capacity=16, val_words=1)
+    qb = q_mod.make_queue(P, host=1, capacity=16, val_words=1)
+    qa, ok_a = q_mod.push_rdma(qa, vals, promise=promise, planned=False)
+    qb, ok_b = q_mod.push_rdma(qb, vals, promise=promise, planned=True)
+    np.testing.assert_array_equal(np.asarray(ok_a), np.asarray(ok_b))
+    np.testing.assert_array_equal(np.asarray(qa.win.data),
+                                  np.asarray(qb.win.data))
+    qa, got_a, out_a = q_mod.pop_rdma(qa, 6, promise=Promise.CR,
+                                      planned=False)
+    qb, got_b, out_b = q_mod.pop_rdma(qb, 6, promise=Promise.CR,
+                                      planned=True)
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(got_b))
+    np.testing.assert_array_equal(
+        np.asarray(out_a)[np.asarray(got_a)],
+        np.asarray(out_b)[np.asarray(got_b)])
+    np.testing.assert_array_equal(np.asarray(qa.win.data),
+                                  np.asarray(qb.win.data))
 
 
 def test_queue_local_promise_zero_phases():

@@ -31,6 +31,31 @@ def test_amo_apply_sweep(P, L, m):
     np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
 
 
+@pytest.mark.parametrize("P,L,m,V,G", [(1, 32, 8, 2, 3), (3, 64, 20, 1, 0),
+                                       (2, 128, 50, 3, 4)])
+def test_fused_apply_sweep(P, L, m, V, G):
+    """Heterogeneous descriptor batches (primitive 0-6 + fused 7-9 opcodes,
+    including out-of-range compound offsets) — Pallas vs the sequential
+    oracle."""
+    from repro.kernels.amo_apply import fused_apply
+    local = jnp.asarray(RNG.integers(0, 100, (P, L)), jnp.int32)
+    ops = np.zeros((P, m, 6 + V), np.int32)
+    ops[..., 0] = RNG.integers(0, L, (P, m))
+    ops[..., 1] = RNG.integers(0, 10, (P, m))
+    ops[..., 2] = RNG.integers(-5, 5, (P, m))
+    ops[..., 3] = RNG.integers(0, 10, (P, m))
+    ops[..., 4] = RNG.integers(-2, L + 2, (P, m))
+    ops[..., 5] = RNG.integers(-5, 5, (P, m))
+    ops[..., 6:] = RNG.integers(0, 100, (P, m, V))
+    mask = jnp.asarray(RNG.random((P, m)) > 0.25)
+    rep_k, new_k = fused_apply(local, jnp.asarray(ops), mask,
+                               reply_width=1 + G)
+    rep_r, new_r = jax.vmap(lambda l, o, mm: ref.fused_apply(
+        l, o, mm, reply_width=1 + G))(local, jnp.asarray(ops), mask)
+    np.testing.assert_array_equal(np.asarray(rep_k), np.asarray(rep_r))
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+
+
 @pytest.mark.parametrize("P,nslots,vw,m,bm",
                          [(2, 16, 1, 10, 4), (1, 64, 3, 33, 16),
                           (3, 32, 2, 17, 128)])
@@ -41,11 +66,12 @@ def test_hash_probe_sweep(P, nslots, vw, m, bm):
     keys = jnp.asarray(RNG.integers(1, 60, (P, m)), jnp.int32)
     vals = jnp.asarray(RNG.integers(0, 100, (P, m, vw)), jnp.int32)
     mask = jnp.asarray(RNG.random((P, m)) > 0.1)
-    ok_k, tab_k = hash_insert(table, starts, keys, vals, mask,
-                              nslots=nslots, rec_w=rec_w, max_probes=8)
-    ok_r, tab_r = jax.vmap(lambda t, s, k, v, mm: ref.hash_insert(
+    ok_k, pr_k, tab_k = hash_insert(table, starts, keys, vals, mask,
+                                    nslots=nslots, rec_w=rec_w, max_probes=8)
+    ok_r, pr_r, tab_r = jax.vmap(lambda t, s, k, v, mm: ref.hash_insert(
         t, s, k, v, mm, nslots, rec_w, 8))(table, starts, keys, vals, mask)
     np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_r))
+    np.testing.assert_array_equal(np.asarray(pr_k), np.asarray(pr_r))
     np.testing.assert_array_equal(np.asarray(tab_k), np.asarray(tab_r))
     f_k, v_k = hash_find(tab_k, starts, keys, mask, nslots=nslots,
                          rec_w=rec_w, max_probes=8, block_m=bm)
@@ -156,3 +182,33 @@ def test_kernel_lane_integration():
     np.testing.assert_array_equal(np.asarray(old_a), np.asarray(old_b))
     np.testing.assert_array_equal(np.asarray(win_a.data),
                                   np.asarray(win_b.data))
+
+
+def test_fused_lane_integration():
+    """The fused insert/find path produces identical tables and results on
+    the XLA and Pallas owner lanes (REPRO_USE_PALLAS toggle)."""
+    from repro.core import hashtable as ht_mod
+    from repro.core.types import Promise
+    from repro.kernels import ops as kops
+    P = 3
+    keys = jnp.asarray(RNG.permutation(2000)[:P * 6].reshape(P, 6) + 1,
+                       jnp.int32)
+    vals = jnp.stack([keys * 2, keys + 3], axis=-1)
+
+    def run():
+        ht = ht_mod.make_hashtable(P, 16, 2)
+        ht, ok, pr = ht_mod.insert_rdma(ht, keys, vals, promise=Promise.CRW,
+                                        fused=True)
+        ht, f, v = ht_mod.find_rdma(ht, keys, promise=Promise.CRW,
+                                    fused=True)
+        return ht.win.data, ok, pr, f, v
+
+    a = run()
+    prev = kops._USE_PALLAS
+    kops._USE_PALLAS = True
+    try:
+        b = run()
+    finally:
+        kops._USE_PALLAS = prev
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
