@@ -9,7 +9,9 @@ CORI_PHASE1 constants.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Set
+
+import numpy as np
 
 import jax
 
@@ -30,6 +32,88 @@ def time_op(fn: Callable, *args, iters: int = 20, warmup: int = 3,
     times.sort()
     med = times[len(times) // 2]
     return med / ops_per_call * 1e6
+
+
+def busy_wait(us: float) -> int:
+    """Spin for `us` microseconds of real compute — the attentiveness
+    emulation's interspersed target work (paper Fig. 6)."""
+    t_end = time.perf_counter() + us * 1e-6
+    x = 0
+    while time.perf_counter() < t_end:
+        x += 1
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Skew-aware workload generation (DESIGN.md §4): batches of hash-table keys
+# whose OWNER distribution follows a named scenario. Owner placement must
+# match the engine's (hash_mix(key) % P), so keys are rejection-sampled
+# against a numpy mirror of core.hashtable.hash_mix.
+# ---------------------------------------------------------------------------
+SCENARIOS = ("uniform", "zipfian", "hot")
+
+
+def np_hash_mix(k: np.ndarray) -> np.ndarray:
+    """Numpy mirror of core.hashtable.hash_mix (32-bit xorshift-multiply)."""
+    k = np.asarray(k).astype(np.uint32)
+    k = (k ^ (k >> np.uint32(16))) * np.uint32(0x85EBCA6B)
+    k = (k ^ (k >> np.uint32(13))) * np.uint32(0xC2B2AE35)
+    return k ^ (k >> np.uint32(16))
+
+
+def owner_of(keys: np.ndarray, nranks: int) -> np.ndarray:
+    return (np_hash_mix(keys) % np.uint32(nranks)).astype(np.int32)
+
+
+def gen_owner_targets(P: int, n: int, scenario: str,
+                      rng: np.random.Generator) -> np.ndarray:
+    """(P, n) target owner per op. uniform: flat over P owners (skew ~1);
+    zipfian: p(owner r) ∝ 1/(r+1)^1.5 (moderate skew); hot: every op
+    targets owner 0 (skew = P — the Fig. 3 single-variable pathology)."""
+    if scenario == "uniform":
+        return rng.integers(0, P, (P, n))
+    if scenario == "zipfian":
+        probs = 1.0 / np.arange(1, P + 1) ** 1.5
+        probs /= probs.sum()
+        return rng.choice(P, size=(P, n), p=probs)
+    if scenario == "hot":
+        return np.zeros((P, n), np.int64)
+    raise ValueError(f"unknown scenario {scenario!r}; one of {SCENARIOS}")
+
+
+def keys_for_targets(targets: np.ndarray, nranks: int,
+                     rng: np.random.Generator,
+                     used: Optional[Set[int]] = None) -> np.ndarray:
+    """Distinct int32 keys whose engine owner equals each target.
+
+    Rejection-samples random keys and buckets them by owner_of(). `used`
+    (mutated in place when given) excludes keys across batches so a stream
+    of batches never repeats a key."""
+    if used is None:
+        used = set()
+    flat = targets.ravel()
+    need = np.bincount(flat, minlength=nranks)
+    buckets: list = [[] for _ in range(nranks)]
+    while any(len(b) < c for b, c in zip(buckets, need)):
+        cand = rng.integers(1, (1 << 31) - 2, size=8192, dtype=np.int64)
+        owners = owner_of(cand, nranks)
+        for k, o in zip(cand.tolist(), owners.tolist()):
+            if len(buckets[o]) < need[o] and k not in used:
+                used.add(k)
+                buckets[o].append(k)
+    taken = [0] * nranks
+    out = np.empty(flat.shape, np.int32)
+    for i, o in enumerate(flat.tolist()):
+        out[i] = buckets[o][taken[o]]
+        taken[o] += 1
+    return out.reshape(targets.shape)
+
+
+def gen_batch_keys(P: int, n: int, scenario: str, rng: np.random.Generator,
+                   used: Optional[Set[int]] = None) -> np.ndarray:
+    """One (P, n) batch of distinct keys following a skew scenario."""
+    return keys_for_targets(gen_owner_targets(P, n, scenario, rng), P, rng,
+                            used)
 
 
 class Csv:

@@ -10,13 +10,14 @@ import traceback
 
 
 def main() -> None:
-    from . import (attentiveness, components, hashtable_bench, queue_bench,
-                   roofline)
+    from . import (adaptive_bench, attentiveness, components,
+                   hashtable_bench, queue_bench, roofline)
     sections = [
         ("components (paper Fig. 3 / Table I)", components.main),
         ("queue push (paper Fig. 4)", queue_bench.main),
         ("hash table (paper Fig. 5)", hashtable_bench.main),
         ("attentiveness (paper Fig. 6)", attentiveness.main),
+        ("adaptive backend selection (DESIGN.md §4)", adaptive_bench.main),
         ("roofline (assignment §Roofline)", roofline.main),
     ]
     failures = 0

@@ -1,5 +1,6 @@
 """Quickstart: the paper's two data structures under both implementation
-styles, plus the cost model choosing between them.
+styles, the cost model choosing between them, and the adaptive AUTO
+backend choosing per batch at runtime (DESIGN.md §4).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import am, costmodel as cm, hashtable as ht, queue as dq
+from repro.core.adaptive import AdaptiveEngine
 from repro.core.types import Backend, OpStats, Promise
 
 P = 8  # virtual ranks
@@ -39,6 +41,20 @@ q, okq = dq.push_rdma(q, keys[..., None], promise=Promise.CW)
 q, gotq, outq = dq.pop_rdma(q, 4, promise=Promise.CR)
 print(f"[rdma] phasal queue push/pop: pushed={int(okq.sum())} "
       f"popped={int(gotq.sum())}")
+
+# --- backend="auto": the adaptive layer picks the arm per batch -------------
+# The default front-end backend IS auto; passing an AdaptiveEngine with
+# measure=True also feeds the chooser's latency EWMAs, and its decision log
+# records which arm each batch took (and the batch's owner-load skew).
+engine3 = am.AMEngine(P)
+chooser = AdaptiveEngine(P, am_engine=engine3, measure=True)
+table3 = ht.make_hashtable(P, nslots=128, val_words=1)
+table3, ok3, _ = ht.insert(table3, keys, vals, adaptive=chooser)
+table3, found3, _ = ht.find(table3, keys, adaptive=chooser)
+for d in chooser.log:
+    print(f"[auto ] {d.op.value}: arm={d.arm} skew={d.skew:.2f} "
+          f"scores={{{', '.join(f'{a}: {s:.1f}' for a, s in d.scores.items())}}}")
+print(f"[auto ] insert+find ok={bool(ok3.all() and found3.all())}")
 
 # --- the paper's punchline: the model picks the winner per workload ---------
 for busy in (0.0, 1.0, 4.0, 16.0):

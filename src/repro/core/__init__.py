@@ -1,12 +1,15 @@
 # The paper's primary contribution: PGAS distributed data structures with
 # selectable RDMA / RPC backends + the analytical cost model that picks
 # between them. See DESIGN.md §2 for the TPU-native translation.
-from . import am, costmodel, hashtable, queue, routing, types, window
+from . import (adaptive, am, costmodel, hashtable, queue, routing, types,
+               window)
+from .adaptive import AdaptiveEngine, Decision
 from .types import AmoKind, Backend, OpStats, Promise
 from .window import Window, make_window, rdma_cas, rdma_fao, rdma_get, rdma_put
 
 __all__ = [
-    "am", "costmodel", "hashtable", "queue", "routing", "types", "window",
+    "adaptive", "am", "costmodel", "hashtable", "queue", "routing", "types",
+    "window", "AdaptiveEngine", "Decision",
     "AmoKind", "Backend", "OpStats", "Promise",
     "Window", "make_window", "rdma_cas", "rdma_fao", "rdma_get", "rdma_put",
 ]

@@ -1,0 +1,388 @@
+"""Adaptive hybrid backend: cost-model-driven RDMA/RPC arm selection per
+batch (DESIGN.md §4).
+
+The paper's punchline is not that RDMA always wins — it is that the
+analytical model *orders* the implementations correctly, "allowing us to
+choose the best implementation" (§VI). This module operationalizes that at
+runtime: every data-structure op batch (hash-table insert/find, queue
+push/pop) picks one of four *arms*
+
+    rdma        seed per-component one-sided engine (fused=False/planned=False)
+    rdma_fused  planned + fused-descriptor one-sided engine (DESIGN.md §2)
+    am          aggregated active messages
+    am_pt       active messages serviced by a progress thread (Fig. 6 "PT")
+
+driven by `costmodel.predict_arm` over calibrated ComponentCosts plus two
+online signals the engine maintains itself:
+
+  * an EWMA of measured per-batch latency per (op, arm), fed back from the
+    engine's own timed executions or from `benchmarks/components.py`-style
+    probes (`observe`) — measured numbers on THIS host dominate the model
+    prior once available;
+  * a batch *skew statistic* (max owner load / mean owner load, computed
+    host-side from the route destinations — the same histogram
+    `routing.owner_loads` derives from a RoutePlan's occupancy): high skew
+    serializes RDMA atomics in one owner's apply lane while AM aggregation
+    amortizes the round trip, so skew tilts the model toward the AM arms.
+
+Every choice is recorded as a `Decision`; the RDMA arms run inside
+`window.decision_scope` and the AM arms thread the record into
+`AMEngine.dispatch`, so benchmarks can attribute every network phase to the
+arm that issued it.
+
+Under `jax.jit` tracing the destinations are abstract: the skew falls back
+to 1.0, timing is skipped, and the decision degrades to the pure
+(deterministic) cost-model choice — safe to stage.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from . import costmodel as cm
+from .costmodel import ARMS, ComponentCosts, DSOp
+from .types import OpStats, Promise
+
+
+@dataclass(frozen=True)
+class Decision:
+    """One per-batch backend choice — the record shared with
+    `AMEngine.dispatch` and `window.decision_scope` call sites."""
+
+    op: DSOp
+    promise: Promise
+    arm: str                      # one of costmodel.ARMS
+    skew: float                   # batch owner-load skew (1.0 if unknown)
+    scores: Dict[str, float]      # per-arm score (µs/op) the choice used
+    source: str                   # "model" | "ewma" | "mixed" | "forced" | ...
+    batch_ops: int                # valid ops in the batch (0 if traced)
+
+
+def _concrete(x) -> Optional[np.ndarray]:
+    """Host value of `x`, or None under jit tracing."""
+    if x is None:
+        return None
+    try:
+        return np.asarray(x)
+    except Exception:  # TracerArrayConversionError and friends
+        return None
+
+
+def batch_skew(dst, nranks: int, valid=None) -> float:
+    """Max owner load / mean owner load over all `nranks` owners.
+
+    1.0 = perfectly uniform, `nranks` = single hot owner. Computed
+    host-side with a bincount — the same statistic `routing.plan_skew`
+    derives from a RoutePlan's exchanged occupancy mask, without paying the
+    plan's occupancy exchange. Returns 1.0 when `dst` is a tracer."""
+    d = _concrete(dst)
+    if d is None:
+        return 1.0
+    v = _concrete(valid)
+    flat = d.ravel() if v is None else d[v.astype(bool)].ravel()
+    if flat.size == 0:
+        return 1.0
+    counts = np.bincount(flat, minlength=nranks)
+    return float(counts.max() * nranks / counts.sum())
+
+
+class AdaptiveEngine:
+    """Per-batch arm chooser + data-structure front-end wrappers.
+
+    am_engine:  AMEngine servicing the `am` / `am_pt` arms (those arms are
+                disabled when absent). Handlers are auto-registered against
+                the first structure each wrapper sees (one AMEngine per
+                structure, as in `am.AMEngine`).
+    params:     ComponentCosts prior for the model scores; `calibrate()`
+                replaces it with measured component latencies.
+    alpha:      EWMA step for observed per-op latencies.
+    policy:     "cost" (argmin score, default) or "round_robin"
+                (deterministically cycle arms — conformance testing).
+    measure:    time each executed batch and feed the EWMA (forces a device
+                sync per op batch; library call sites keep it off).
+    explore_every: when > 0, a "cost" decision probes the runner-up arm
+                instead of the winner whenever the runner-up's EWMA has not
+                been refreshed for this many decisions of the same op —
+                bounded-cost exploration that prevents a single bad
+                measurement from starving an arm forever.
+    """
+
+    def __init__(self, nranks: int, am_engine=None,
+                 params: ComponentCosts = cm.TPU_V5E_ICI,
+                 alpha: float = 0.25, arms: Optional[Tuple[str, ...]] = None,
+                 policy: str = "cost", measure: bool = False,
+                 explore_every: int = 0):
+        if arms is None:
+            arms = ARMS if am_engine is not None else ("rdma", "rdma_fused")
+        for a in arms:
+            if a not in ARMS:
+                raise ValueError(f"unknown arm {a!r}")
+            if a in ("am", "am_pt") and am_engine is None:
+                raise ValueError(f"arm {a!r} needs an am_engine")
+        if policy not in ("cost", "round_robin"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.nranks = nranks
+        self.am_engine = am_engine
+        self.params = params
+        self.alpha = alpha
+        self.arms = tuple(arms)
+        self.policy = policy
+        self.measure = measure
+        self.explore_every = explore_every
+        self.force_arm: Optional[str] = None
+        self.ewma: Dict[Tuple[DSOp, str], float] = {}
+        # bounded ring: the default AUTO front-ends log every batch here
+        # and nothing drains it
+        self.log: collections.deque = collections.deque(maxlen=4096)
+        self.last_decision: Optional[Decision] = None
+        self._rr = 0
+        self._op_count: Dict[DSOp, int] = {}        # decisions per op
+        self._seen: Dict[Tuple[DSOp, str], int] = {}  # last observe tick
+
+    # -- signals ------------------------------------------------------------
+    def calibrate(self, measured: Dict[str, float]) -> ComponentCosts:
+        """Replace the model prior with measured component latencies
+        (benchmarks/components.py row dict)."""
+        self.params = cm.calibrate(measured, base=self.params)
+        return self.params
+
+    def observe(self, decision: Decision, us_per_op: float) -> None:
+        """EWMA-update the measured latency of (op, arm)."""
+        key = (decision.op, decision.arm)
+        prev = self.ewma.get(key)
+        self.ewma[key] = (us_per_op if prev is None
+                          else prev + self.alpha * (us_per_op - prev))
+        self._seen[key] = self._op_count.get(decision.op, 0)
+
+    # -- decision -----------------------------------------------------------
+    def scores(self, op: DSOp, promise: Promise,
+               stats: Optional[OpStats] = None) -> Tuple[Dict[str, float], str]:
+        """Per-arm score in µs/op: the measured EWMA when one exists for
+        (op, arm), else the cost-model prediction. Returns (scores, source)
+        with source describing which inputs were used."""
+        s = stats or OpStats()
+        out, used = {}, set()
+        for arm in self.arms:
+            ew = self.ewma.get((op, arm))
+            if ew is not None:
+                out[arm] = ew
+                used.add("ewma")
+            else:
+                out[arm] = cm.predict_arm(op, promise, arm, s, self.params)
+                used.add("model")
+        return out, ("mixed" if len(used) > 1 else used.pop())
+
+    def decide(self, op: DSOp, promise: Promise, dst=None, valid=None,
+               stats: Optional[OpStats] = None,
+               nops: Optional[int] = None) -> Decision:
+        """Choose the arm for one batch. `dst` (P, n) feeds the skew
+        statistic (skipped when `stats.skew` is already set — e.g. the
+        hosted queue's skew is `nranks` by construction, no device read
+        needed); `stats` carries the remaining workload signals
+        (expected_probes, target_busy_us, ...)."""
+        s = stats or OpStats()
+        skew = s.skew
+        if dst is not None and skew == 1.0:
+            skew = batch_skew(dst, self.nranks, valid)
+        s = replace(s, skew=skew)
+        if nops is None:
+            v = _concrete(valid)
+            d = _concrete(dst)
+            if v is not None:
+                nops = int(v.sum())
+            elif d is not None:
+                nops = int(d.size)
+            else:
+                nops = 0
+        scores, source = self.scores(op, promise, s)
+        tick = self._op_count.get(op, 0) + 1
+        self._op_count[op] = tick
+        if self.force_arm is not None:
+            arm, source = self.force_arm, "forced"
+        elif self.policy == "round_robin":
+            arm = self.arms[self._rr % len(self.arms)]
+            self._rr += 1
+            source = "round_robin"
+        else:
+            # tie-break toward the cheaper-at-runtime engine: the planned +
+            # fused arm strictly dominates the seed arm at equal predicted
+            # cost (the queue has no fused formula, so they tie there)
+            rank = {"rdma_fused": 0, "am": 1, "am_pt": 2, "rdma": 3}
+            ranked = sorted(scores, key=lambda a: (scores[a], rank[a]))
+            arm = ranked[0]
+            if self.explore_every > 0 and len(ranked) > 1:
+                runner = ranked[1]
+                if (tick - self._seen.get((op, runner), 0)
+                        >= self.explore_every):
+                    arm, source = runner, "explore"
+                    # mark the probe attempt NOW: if the caller never
+                    # observes a latency, the staleness clock still resets
+                    # and exploration stays bounded at 1/explore_every
+                    # instead of locking onto the runner-up forever
+                    self._seen[(op, runner)] = tick
+        dec = Decision(op=op, promise=promise, arm=arm, skew=skew,
+                       scores=scores, source=source, batch_ops=nops)
+        self.log.append(dec)
+        self.last_decision = dec
+        return dec
+
+    # -- execution helpers --------------------------------------------------
+    def _timed(self, dec: Decision, fn):
+        """Run fn(), feeding the EWMA when measuring is on and the batch is
+        concrete. am_pt accounts the progress-thread contention factor on
+        top of the measured dispatch (the Fig. 6 "PT" accounting, as in
+        benchmarks/attentiveness.py)."""
+        if not (self.measure and dec.batch_ops):
+            return fn()
+        t0 = time.perf_counter()
+        out = fn()
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            return out  # traced values: skip the observation
+        us = (time.perf_counter() - t0) * 1e6 / dec.batch_ops
+        if dec.arm == "am_pt":
+            us *= self.params.pt_overhead
+        self.observe(dec, us)
+        return out
+
+    def _host_stats(self, stats: Optional[OpStats]) -> OpStats:
+        """Stats for a hosted (single-owner) structure: every op targets
+        the host rank, so the skew is `nranks` by construction — no
+        destination array needs to leave the device to know it."""
+        s = stats or OpStats()
+        return s if s.skew != 1.0 else replace(s, skew=float(self.nranks))
+
+    def _need_am(self, name: str, register):
+        eng = self.am_engine
+        assert eng is not None
+        if name not in eng._handlers:
+            register(eng)
+        return eng
+
+    # -- data-structure wrappers -------------------------------------------
+    def ht_insert(self, ht, keys, vals, promise: Promise = Promise.CRW,
+                  valid=None, max_probes: int = 8,
+                  stats: Optional[OpStats] = None):
+        """Adaptive hash-table insert: returns (table', ok, probes).
+
+        The skew statistic reads the batch's owner placement on the host
+        (one device read per batch); pre-set `stats.skew` to skip it."""
+        from . import hashtable as ht_mod
+        from . import window as win_mod
+        dst, _ = ht_mod._place(ht, keys)
+        dec = self.decide(DSOp.HT_INSERT, promise, dst, valid, stats)
+        if dec.arm in ("am", "am_pt"):
+            eng = self._need_am(
+                "ht_insert",
+                lambda e: ht_mod.build_am_handlers(ht, e,
+                                                   max_probes=max_probes))
+            return self._timed(dec, lambda: ht_mod.insert_rpc(
+                ht, eng, keys, vals, valid=valid, decision=dec))
+
+        def run():
+            with win_mod.decision_scope(dec):
+                return ht_mod.insert_rdma(
+                    ht, keys, vals, promise=promise, valid=valid,
+                    max_probes=max_probes, fused=dec.arm == "rdma_fused")
+        return self._timed(dec, run)
+
+    def ht_find(self, ht, keys, promise: Promise = Promise.CR,
+                valid=None, max_probes: int = 8,
+                stats: Optional[OpStats] = None):
+        """Adaptive hash-table find: returns (table', found, vals)."""
+        from . import hashtable as ht_mod
+        from . import window as win_mod
+        dst, _ = ht_mod._place(ht, keys)
+        dec = self.decide(DSOp.HT_FIND, promise, dst, valid, stats)
+        if dec.arm in ("am", "am_pt"):
+            eng = self._need_am(
+                "ht_find",
+                lambda e: ht_mod.build_am_handlers(ht, e,
+                                                   max_probes=max_probes))
+            found, vals = self._timed(dec, lambda: ht_mod.find_rpc(
+                ht, eng, keys, valid=valid, decision=dec))
+            return ht, found, vals
+
+        def run():
+            with win_mod.decision_scope(dec):
+                return ht_mod.find_rdma(
+                    ht, keys, promise=promise, valid=valid,
+                    max_probes=max_probes, fused=dec.arm == "rdma_fused")
+        return self._timed(dec, run)
+
+    def q_push(self, q, vals, promise: Promise = Promise.CRW, valid=None,
+               max_cas_rounds: int = 8, stats: Optional[OpStats] = None):
+        """Adaptive queue push: returns (queue', pushed). The queue's
+        `rdma_fused` arm is the planned engine (one RoutePlan shared by all
+        component phases — the hosted queue has no compound descriptors)."""
+        from . import queue as q_mod
+        from . import window as win_mod
+        P, n, _ = vals.shape
+        dec = self.decide(DSOp.Q_PUSH, promise, valid=valid,
+                          stats=self._host_stats(stats),
+                          nops=P * n if valid is None else None)
+        if dec.arm in ("am", "am_pt"):
+            eng = self._need_am(
+                "q_push", lambda e: q_mod.build_am_handlers(q, e))
+            return self._timed(dec, lambda: q_mod.push_rpc(
+                q, eng, vals, valid=valid, decision=dec))
+
+        def run():
+            with win_mod.decision_scope(dec):
+                return q_mod.push_rdma(
+                    q, vals, promise=promise, valid=valid,
+                    max_cas_rounds=max_cas_rounds,
+                    planned=dec.arm == "rdma_fused")
+        return self._timed(dec, run)
+
+    def q_pop(self, q, n: int, promise: Promise = Promise.CR, valid=None,
+              max_cas_rounds: int = 8, stats: Optional[OpStats] = None):
+        """Adaptive queue pop: returns (queue', got, vals)."""
+        from . import queue as q_mod
+        from . import window as win_mod
+        dec = self.decide(DSOp.Q_POP, promise, valid=valid,
+                          stats=self._host_stats(stats),
+                          nops=q.nranks * n if valid is None else None)
+        if dec.arm in ("am", "am_pt"):
+            eng = self._need_am(
+                "q_pop", lambda e: q_mod.build_am_handlers(q, e))
+            return self._timed(dec, lambda: q_mod.pop_rpc(
+                q, eng, n, valid=valid, decision=dec))
+
+        def run():
+            with win_mod.decision_scope(dec):
+                return q_mod.pop_rdma(
+                    q, n, promise=promise, valid=valid,
+                    max_cas_rounds=max_cas_rounds,
+                    planned=dec.arm == "rdma_fused")
+        return self._timed(dec, run)
+
+
+# ---------------------------------------------------------------------------
+# Default engines for the `backend="auto"` front-ends, cached so EWMA state
+# and the decision log persist across calls that don't pass an explicit
+# AdaptiveEngine. The with-AMEngine case hangs the chooser off the AMEngine
+# itself (same lifecycle — no global registry pinning dead engines); the
+# engine-less case is one chooser per nranks.
+# ---------------------------------------------------------------------------
+_DEFAULT: Dict[int, AdaptiveEngine] = {}
+
+
+def default_engine(nranks: int, am_engine=None) -> AdaptiveEngine:
+    if am_engine is not None:
+        eng = getattr(am_engine, "_default_adaptive", None)
+        if eng is None or eng.nranks != nranks:
+            eng = AdaptiveEngine(nranks, am_engine=am_engine)
+            am_engine._default_adaptive = eng
+        return eng
+    eng = _DEFAULT.get(nranks)
+    if eng is None:
+        eng = AdaptiveEngine(nranks)
+        _DEFAULT[nranks] = eng
+    return eng

@@ -15,6 +15,7 @@ The TPU-native realization of GASNet-EX style active messages (DESIGN.md §2):
 """
 from __future__ import annotations
 
+import collections
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Tuple
 
@@ -52,6 +53,11 @@ class AMEngine:
     def __init__(self, nranks: int):
         self.nranks = nranks
         self._handlers: dict[str, Handler] = {}
+        # (handler name, Decision) per dispatch issued by the adaptive
+        # layer — benchmarks read this to log which arm serviced a batch.
+        # Bounded ring: library callers never drain it.
+        self.dispatch_log: collections.deque = collections.deque(
+            maxlen=1024)
 
     def register(self, name: str, fn: HandlerFn, reply_width: int,
                  batched_fn=None) -> Handler:
@@ -68,7 +74,8 @@ class AMEngine:
     def dispatch(self, handler: Handler, state: Any, dst: Array,
                  payload: Array, valid: Optional[Array] = None,
                  cap: Optional[int] = None,
-                 plan: Optional[routing.RoutePlan] = None
+                 plan: Optional[routing.RoutePlan] = None,
+                 decision: Optional[Any] = None
                  ) -> Tuple[Any, Array, Array]:
         """Issue one aggregated AM phase for a batch of requests.
 
@@ -78,6 +85,8 @@ class AMEngine:
         plan:    optional precomputed RoutePlan (routing.make_plan) — callers
                  issuing repeated dispatches to fixed destinations reuse one
                  plan per batch and skip the per-dispatch routing sort
+        decision: optional adaptive.Decision that chose this dispatch —
+                 recorded in `self.dispatch_log` for benchmark attribution
         returns (state', replies (P, n, RW), delivered (P, n)).
 
         Exactly two network phases regardless of handler complexity; for
@@ -85,6 +94,8 @@ class AMEngine:
         is derivable locally from `delivered`, matching the paper's
         counter-increment reply elision).
         """
+        if decision is not None:
+            self.dispatch_log.append((handler.name, decision))
         if plan is not None:
             cap = plan.cap
             routed = routing.route_with_plan(plan, payload, active=valid,

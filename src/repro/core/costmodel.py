@@ -79,6 +79,11 @@ class DSOp(enum.Enum):
     Q_POP = "queue_pop"
 
 
+# Backend *arms* the adaptive layer chooses between per batch (core/adaptive
+# .py). Each maps onto (Backend, fused?, progress_thread?) below.
+ARMS = ("rdma", "rdma_fused", "am", "am_pt")
+
+
 def attentiveness_delay(c: ComponentCosts, stats: OpStats) -> float:
     """Expected extra wait for an AM to be serviced (paper Fig. 6).
 
@@ -92,7 +97,11 @@ def attentiveness_delay(c: ComponentCosts, stats: OpStats) -> float:
 
 
 def _rpc_cost(c: ComponentCosts, stats: OpStats) -> float:
-    return c.am_rt + c.handler + attentiveness_delay(c, stats)
+    # Skew serializes handler work at the hot owner, but the AM round trip
+    # itself is amortized by aggregation — only the (small) handler term
+    # scales, which is why AM wins skewed batches (DESIGN.md §4).
+    return (c.am_rt + c.handler * max(1.0, stats.skew)
+            + attentiveness_delay(c, stats))
 
 
 def predict(op: DSOp, promise: Promise, backend: Backend,
@@ -113,7 +122,11 @@ def predict(op: DSOp, promise: Promise, backend: Backend,
         return _rpc_cost(c, s)
 
     probes = max(1.0, s.expected_probes)
-    amo = c.amo_apply
+    # Conflicting atomics funnel into one owner's serialized apply lane: a
+    # batch with skew k makes the hot owner apply k× the mean load, so the
+    # per-op owner-lane term scales with the skew (the Fig. 3
+    # FAD-single-variable pathology, generalized to partial skew).
+    amo = c.amo_apply * max(1.0, s.skew)
     if op == DSOp.HT_INSERT:
         if promise == Promise.CRW:      # (a) fully atomic: CAS + W + FAO
             if fused:                   # probes × (claim+write+publish)
@@ -235,6 +248,29 @@ def choose_backend(op: DSOp, promise: Promise,
     rdma = predict(op, promise, Backend.RDMA, s, params, fused=fused)
     rpc = predict(op, promise, Backend.RPC, s, params)
     return Backend.RDMA if rdma <= rpc else Backend.RPC
+
+
+def predict_arm(op: DSOp, promise: Promise, arm: str,
+                stats: Optional[OpStats] = None,
+                params: ComponentCosts = CORI_PHASE1) -> float:
+    """Per-op latency of one adaptive *arm* (see ARMS).
+
+    `rdma` / `rdma_fused` are the seed and planned+fused one-sided engines;
+    `am` / `am_pt` are aggregated active messages without / with a progress
+    thread (the paper Fig. 6 "PT" curve). The AUTO chooser in
+    core/adaptive.py calls this for every arm and takes the argmin."""
+    s = stats or OpStats()
+    if arm == "rdma":
+        return predict(op, promise, Backend.RDMA, s, params, fused=False)
+    if arm == "rdma_fused":
+        return predict(op, promise, Backend.RDMA, s, params, fused=True)
+    if arm == "am":
+        return predict(op, promise, Backend.RPC,
+                       replace(s, progress_thread=False), params)
+    if arm == "am_pt":
+        return predict(op, promise, Backend.RPC,
+                       replace(s, progress_thread=True), params)
+    raise ValueError(f"unknown arm {arm!r}; expected one of {ARMS}")
 
 
 def calibrate(measured: Dict[str, float],

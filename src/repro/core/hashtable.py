@@ -35,7 +35,7 @@ from . import am as am_mod
 from . import routing
 from . import window as win_mod
 from .types import (FLAG_EMPTY, FLAG_READY, FLAG_RESERVED, READ_UNIT,
-                    STATE_MASK, Backend, Promise)
+                    STATE_MASK, Backend, Promise, as_backend)
 from .window import (Window, rdma_cas, rdma_cas_put, rdma_cas_put_publish,
                      rdma_fao, rdma_fao_get, rdma_get, rdma_put)
 
@@ -358,8 +358,8 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
 
 
 def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
-               vals: Array, valid: Optional[Array] = None
-               ) -> Tuple[DHashTable, Array, Array]:
+               vals: Array, valid: Optional[Array] = None,
+               decision=None) -> Tuple[DHashTable, Array, Array]:
     """Insert-or-assign via ONE AM round trip (cost: am_rt + handler).
 
     Returns (table', ok, probes): probes is the handler's REAL probe count
@@ -369,7 +369,7 @@ def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
                               axis=-1)
     h = engine.handler("ht_insert")
     data, replies, delivered = engine.dispatch(h, ht.win.data, dst, payload,
-                                               valid)
+                                               valid, decision=decision)
     ok = delivered & (replies[..., 0] > 0)
     probes = jnp.where(delivered, replies[..., 1], 0)
     return (DHashTable(win=Window(data=data), nslots=ht.nslots,
@@ -377,29 +377,42 @@ def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
 
 
 def find_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
-             valid: Optional[Array] = None
+             valid: Optional[Array] = None, decision=None
              ) -> Tuple[Array, Array]:
     dst, start = _place(ht, keys)
     payload = jnp.concatenate([start[..., None], keys[..., None]], axis=-1)
     h = engine.handler("ht_find")
     _, replies, delivered = engine.dispatch(h, ht.win.data, dst, payload,
-                                            valid)
+                                            valid, decision=decision)
     found = delivered & (replies[..., 0] > 0)
     return found, replies[..., 1:]
 
 
 # ---------------------------------------------------------------------------
-# Unified front-end
+# Unified front-end. backend accepts Backend or its string value; the
+# default is AUTO — the adaptive layer (core/adaptive.py, DESIGN.md §4)
+# picks the cheapest arm per batch. Without an AMEngine the AUTO choice is
+# restricted to the one-sided arms (rdma / rdma_fused).
 # ---------------------------------------------------------------------------
-def insert(ht, keys, vals, *, promise=Promise.CRW, backend=Backend.RDMA,
-           engine=None, **kw):
+def insert(ht, keys, vals, *, promise=Promise.CRW, backend=Backend.AUTO,
+           engine=None, adaptive=None, **kw):
+    backend = as_backend(backend)
+    if backend == Backend.AUTO:
+        from . import adaptive as ad
+        a = adaptive or ad.default_engine(ht.nranks, am_engine=engine)
+        return a.ht_insert(ht, keys, vals, promise=promise, **kw)
     if backend == Backend.RPC:
         return insert_rpc(ht, engine, keys, vals, valid=kw.get("valid"))
     return insert_rdma(ht, keys, vals, promise=promise, **kw)
 
 
-def find(ht, keys, *, promise=Promise.CR, backend=Backend.RDMA, engine=None,
-         **kw):
+def find(ht, keys, *, promise=Promise.CR, backend=Backend.AUTO, engine=None,
+         adaptive=None, **kw):
+    backend = as_backend(backend)
+    if backend == Backend.AUTO:
+        from . import adaptive as ad
+        a = adaptive or ad.default_engine(ht.nranks, am_engine=engine)
+        return a.ht_find(ht, keys, promise=promise, **kw)
     if backend == Backend.RPC:
         found, vals = find_rpc(ht, engine, keys, valid=kw.get("valid"))
         return ht, found, vals

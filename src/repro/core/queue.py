@@ -41,7 +41,7 @@ import jax.numpy as jnp
 from . import am as am_mod
 from . import routing
 from . import window as win_mod
-from .types import AmoKind, Backend, Promise
+from .types import AmoKind, Backend, Promise, as_backend
 from .window import Window, rdma_cas, rdma_fao, rdma_get, rdma_put
 
 Array = jax.Array
@@ -242,6 +242,11 @@ def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
 
         win, _ = jax.lax.fori_loop(0, max_cas_rounds, round_,
                                    (win, pending))
+    # Failed pops report zeros, not routing garbage: the reply words of
+    # undelivered ops are garbage by contract in the unplanned engine, and
+    # the adaptive layer swaps backends per batch — visible results must be
+    # bit-identical across every backend (tests/test_conformance.py).
+    vals = jnp.where(got[..., None], vals, 0)
     return (DQueue(win=win, host=q.host, capacity=q.capacity,
                    val_words=q.val_words, checksum=q.checksum), got, vals)
 
@@ -397,26 +402,28 @@ def build_am_handlers(q: DQueue, engine: am_mod.AMEngine):
 
 
 def push_rpc(q: DQueue, engine: am_mod.AMEngine, vals: Array,
-             valid: Optional[Array] = None) -> Tuple[DQueue, Array]:
+             valid: Optional[Array] = None,
+             decision=None) -> Tuple[DQueue, Array]:
     """Push via ONE AM round trip."""
     P, n, _ = vals.shape
     dst = _host_dst(q, (P, n))
     h = engine.handler("q_push")
     data, replies, delivered = engine.dispatch(h, q.win.data, dst, vals,
-                                               valid)
+                                               valid, decision=decision)
     ok = delivered & (replies[..., 0] > 0)
     return (DQueue(win=Window(data=data), host=q.host, capacity=q.capacity,
                    val_words=q.val_words, checksum=q.checksum), ok)
 
 
 def pop_rpc(q: DQueue, engine: am_mod.AMEngine, n: int,
-            valid: Optional[Array] = None) -> Tuple[DQueue, Array, Array]:
+            valid: Optional[Array] = None,
+            decision=None) -> Tuple[DQueue, Array, Array]:
     P = q.nranks
     dst = _host_dst(q, (P, n))
     payload = jnp.zeros((P, n, 1), dtype=jnp.int32)
     h = engine.handler("q_pop")
     data, replies, delivered = engine.dispatch(h, q.win.data, dst, payload,
-                                               valid)
+                                               valid, decision=decision)
     got = delivered & (replies[..., 0] > 0)
     vals = jnp.where(got[..., None], replies[..., 1:], 0)
     return (DQueue(win=Window(data=data), host=q.host, capacity=q.capacity,
@@ -424,21 +431,33 @@ def pop_rpc(q: DQueue, engine: am_mod.AMEngine, n: int,
 
 
 # ---------------------------------------------------------------------------
-# Unified front-end
+# Unified front-end. backend accepts Backend or its string value; default
+# AUTO routes through the adaptive layer (core/adaptive.py, DESIGN.md §4).
+# C_L short-circuits before any backend decision (zero network phases).
 # ---------------------------------------------------------------------------
-def push(q, vals, *, promise=Promise.CRW, backend=Backend.RDMA, engine=None,
-         **kw):
+def push(q, vals, *, promise=Promise.CRW, backend=Backend.AUTO, engine=None,
+         adaptive=None, **kw):
     if promise == Promise.CL:
         return push_local(q, vals, **kw)
+    backend = as_backend(backend)
+    if backend == Backend.AUTO:
+        from . import adaptive as ad
+        a = adaptive or ad.default_engine(q.nranks, am_engine=engine)
+        return a.q_push(q, vals, promise=promise, **kw)
     if backend == Backend.RPC:
         return push_rpc(q, engine, vals, valid=kw.get("valid"))
     return push_rdma(q, vals, promise=promise, **kw)
 
 
-def pop(q, n, *, promise=Promise.CR, backend=Backend.RDMA, engine=None,
-        **kw):
+def pop(q, n, *, promise=Promise.CR, backend=Backend.AUTO, engine=None,
+        adaptive=None, **kw):
     if promise == Promise.CL:
         return pop_local(q, n)
+    backend = as_backend(backend)
+    if backend == Backend.AUTO:
+        from . import adaptive as ad
+        a = adaptive or ad.default_engine(q.nranks, am_engine=engine)
+        return a.q_pop(q, n, promise=promise, **kw)
     if backend == Backend.RPC:
         return pop_rpc(q, engine, n, valid=kw.get("valid"))
     return pop_rdma(q, n, promise=promise, **kw)

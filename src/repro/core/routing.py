@@ -210,6 +210,23 @@ def make_plan(dst: jax.Array, valid: Optional[jax.Array] = None,
                      dropped=binned.dropped, cap=cap)
 
 
+def owner_loads(plan: RoutePlan) -> jax.Array:
+    """Delivered ops per owner rank, from the plan's occupancy mask —
+    the (P,) histogram behind the adaptive layer's skew statistic."""
+    return plan.mask.sum(axis=(1, 2)).astype(jnp.int32)
+
+
+def plan_skew(plan: RoutePlan) -> jax.Array:
+    """Batch skew statistic: max owner load / mean owner load (over all P
+    owners). 1.0 = perfectly uniform; P = single hot owner. High skew
+    serializes RDMA atomics in one owner's apply lane (DESIGN.md §4);
+    `adaptive.batch_skew` computes the same statistic host-side from `dst`
+    without paying the plan's occupancy exchange."""
+    loads = owner_loads(plan).astype(jnp.float32)
+    total = jnp.maximum(loads.sum(), 1.0)
+    return loads.max() * loads.shape[0] / total
+
+
 def route_with_plan(plan: RoutePlan, payload: jax.Array,
                     active: Optional[jax.Array] = None,
                     role: str = "req") -> Routed:

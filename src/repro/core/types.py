@@ -31,6 +31,11 @@ class Backend(enum.Enum):
     AUTO = "auto"   # cost-model-selected
 
 
+def as_backend(backend) -> "Backend":
+    """Coerce a Backend or its string value ("rdma"/"rpc"/"auto")."""
+    return Backend(backend) if isinstance(backend, str) else backend
+
+
 class AmoKind(enum.IntEnum):
     """Fixed-function atomics. Integer codes shared with the Pallas kernel.
 
@@ -85,3 +90,8 @@ class OpStats:
     contention: float = 1.0          # expected CAS attempts for persistent CAS
     target_busy_us: float = 0.0      # interspersed compute between dispatch points
     progress_thread: bool = False    # dedicated servicing channel (paper Fig. 6 "PT")
+    skew: float = 1.0                # batch owner-load skew: max owner load / mean
+                                     # (1.0 = uniform; P = single hot owner).
+                                     # High skew serializes RDMA atomics in one
+                                     # owner's apply lane while AM aggregation
+                                     # amortizes the round trip (DESIGN.md §4).

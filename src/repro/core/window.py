@@ -17,9 +17,10 @@ independently written sequential oracle both are tested against.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +29,37 @@ from . import routing
 from .types import AmoKind
 
 Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Decision tagging: the adaptive layer (core/adaptive.py) wraps the RDMA
+# arms it executes in `decision_scope(dec)`; every routed phase issued
+# inside the scope is logged as (role, decision) so benchmarks can attribute
+# phases to the arm that issued them. Logging happens at trace time — the
+# adaptive layer dispatches arms at the Python level, once per batch. The
+# log is a bounded ring (library callers on the default AUTO path never
+# drain it; unbounded growth would leak).
+# ---------------------------------------------------------------------------
+_CURRENT_DECISION = None
+_PHASE_LOG_MAX = 4096
+_PHASE_LOG: List[Tuple[str, object]] = []
+
+
+@contextlib.contextmanager
+def decision_scope(decision):
+    global _CURRENT_DECISION
+    prev = _CURRENT_DECISION
+    _CURRENT_DECISION = decision
+    try:
+        yield
+    finally:
+        _CURRENT_DECISION = prev
+
+
+def drain_phase_log() -> List[Tuple[str, object]]:
+    """Return and clear the (role, decision) log of tagged phases."""
+    out = list(_PHASE_LOG)
+    _PHASE_LOG.clear()
+    return out
 
 
 @functools.partial(jax.tree_util.register_dataclass, data_fields=["data"],
@@ -184,6 +216,10 @@ def _route_phase(dst: Array, payload: Array, cap: int,
                  valid: Optional[Array],
                  plan: Optional[routing.RoutePlan],
                  role: str) -> routing.Routed:
+    if _CURRENT_DECISION is not None:
+        _PHASE_LOG.append((role, _CURRENT_DECISION))
+        if len(_PHASE_LOG) > _PHASE_LOG_MAX:
+            del _PHASE_LOG[:-_PHASE_LOG_MAX]
     if plan is None:
         return routing.route(dst, payload, cap, valid, role=role)
     # valid=None -> active=None: reuse the plan occupancy as-is instead of

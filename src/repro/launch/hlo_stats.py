@@ -55,6 +55,11 @@ _SKIP_OUTPUT_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
                     "after-all", "partition-id", "replica-id", "reshape",
                     "transpose", "broadcast", "convert"}
 
+# Opnames tallied (trip-weighted) into Stats.op_counts. "sort" backs the
+# phase-count regression: a planned batch lowers to exactly ONE argsort
+# (routing.make_plan) and plan-reusing phases to none.
+COUNTED_OPS = ("sort",)
+
 
 def shape_bytes(type_str: str) -> int:
     total = 0
@@ -80,6 +85,10 @@ class Stats:
     hbm_bytes: float = 0.0
     coll_bytes: float = 0.0
     coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # trip-weighted occurrence counts of caller-selected opnames (e.g.
+    # "sort" — the phase-count regression pins the planner's one-argsort
+    # claim with it, tests/test_phase_counts.py)
+    op_counts: Dict[str, float] = field(default_factory=dict)
 
     def add(self, other: "Stats", mult: float = 1.0):
         self.flops += other.flops * mult
@@ -89,6 +98,8 @@ class Stats:
             slot = self.coll.setdefault(k, {"count": 0.0, "bytes": 0.0})
             slot["count"] += v["count"] * mult
             slot["bytes"] += v["bytes"] * mult
+        for k, v in other.op_counts.items():
+            self.op_counts[k] = self.op_counts.get(k, 0.0) + v * mult
 
 
 @dataclass
@@ -209,6 +220,8 @@ class HloStats:
             if opname not in _SKIP_OUTPUT_OPS and not opname.endswith(
                     "-done"):
                 st.hbm_bytes += 2 * out_b
+            if opname in COUNTED_OPS:
+                st.op_counts[opname] = st.op_counts.get(opname, 0.0) + 1
             if base in COLLECTIVES and not opname.endswith("-done"):
                 n = _group_size(line, self.world)
                 moved = _collective_bytes(base, out_b, n)
@@ -251,6 +264,7 @@ class HloStats:
             "hbm_bytes": self.total.hbm_bytes,
             "collective_bytes": self.total.coll_bytes,
             "collectives": self.total.coll,
+            "op_counts": self.total.op_counts,
         }
 
 

@@ -1,0 +1,112 @@
+"""Subprocess helper for tests/test_phase_counts.py: lower the phase
+engine under a real 8-way sharded mesh (fake CPU devices) and count the
+all-to-all collectives / sorts in the optimized HLO with the
+launch/hlo_stats trip-count-aware analyzer.
+
+Runs as `python tests/phase_count_probe.py` (XLA_FLAGS must be set before
+jax initializes, which is why this is a subprocess and not a fixture) and
+prints one JSON dict on the last line.
+"""
+import json
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec   # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import am as am_mod                           # noqa: E402
+from repro.core import hashtable as ht_mod                    # noqa: E402
+from repro.core import routing, window                        # noqa: E402
+from repro.core.types import AmoKind, Promise                 # noqa: E402
+from repro.launch import hlo_stats                            # noqa: E402
+
+P, N = 8, 8
+MESH = Mesh(jax.devices(), ("p",))
+SHARD = NamedSharding(MESH, PartitionSpec("p"))
+
+
+def hook(x, role):
+    return jax.lax.with_sharding_constraint(x, SHARD)
+
+
+def counts(fn, *args) -> dict:
+    """{'a2a': trip-weighted all-to-all count, 'sorts': trip-weighted sort
+    count} of the optimized sharded HLO of jit(fn)(*args), both from the
+    hlo_stats analyzer."""
+    with routing.sharding_hook(hook):
+        compiled = jax.jit(fn).lower(*args).compile()
+    st = hlo_stats.HloStats(compiled.as_text(), world=P).summary()
+    a2a = st["collectives"].get("all-to-all", {"count": 0})["count"]
+    return {"a2a": a2a, "sorts": st["op_counts"].get("sort", 0)}
+
+
+def main():
+    rng = np.random.default_rng(0)
+    dst = jnp.asarray(rng.integers(0, P, (P, N)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 32, (P, N)), jnp.int32)
+    win = window.make_window(P, 64)
+    vals = jnp.ones((P, N, 2), jnp.int32)
+    plan = routing.make_plan(dst, cap=N)
+
+    out = {}
+    # planned component ops (full results used — nothing DCE-able)
+    out["put"] = counts(
+        lambda w, v: window.rdma_put(w, dst, off, v, plan=plan), win, vals)
+    out["get"] = counts(
+        lambda w: window.rdma_get(w, dst, off, 2, plan=plan), win)
+    out["cas"] = counts(
+        lambda w: window.rdma_cas(w, dst, off, 0, 1, plan=plan), win)
+    out["fao"] = counts(
+        lambda w: window.rdma_fao(w, dst, off, 1, AmoKind.FAA, plan=plan),
+        win)
+    # unplanned engine-level counts (per-phase occupancy-mask exchange)
+    out["cas_unplanned"] = counts(
+        lambda w: window.rdma_cas(w, dst, off, 0, 1), win)
+    # the plan itself: ONE argsort + ONE occupancy exchange
+    out["make_plan"] = counts(lambda d: routing.make_plan(d, cap=N).mask,
+                              dst)
+    out["route_with_plan"] = counts(
+        lambda p: routing.route_with_plan(plan, p).at_owner, vals)
+
+    # AM dispatch: 2 exchanges; reply-elided dispatch: 1
+    eng = am_mod.AMEngine(P)
+    echo = eng.register(
+        "echo", lambda local, pay, mask: (local, pay[:, :1]), reply_width=1)
+    fire = eng.register(
+        "fire",
+        lambda local, pay, mask:
+            (local + jnp.sum(pay * mask[:, None].astype(jnp.int32)),
+             jnp.zeros((pay.shape[0], 0), jnp.int32)),
+        reply_width=0)
+    state = jnp.zeros((P, 4), jnp.int32)
+    out["dispatch"] = counts(
+        lambda s, pay: eng.dispatch(echo, s, dst, pay, plan=plan),
+        state, vals)
+    out["dispatch_elided"] = counts(
+        lambda s, pay: eng.dispatch(fire, s, dst, pay, plan=plan)[0],
+        state, vals)
+
+    # whole fused C_RW insert at max_probes=1: 2 probe exchanges + 1 plan
+    keys = jnp.asarray(rng.integers(1, 1 << 20, (P, N)), jnp.int32)
+    kvals = jnp.stack([keys], axis=-1)
+    ht = ht_mod.make_hashtable(P, 64, 1)
+    out["ht_insert_fused"] = counts(
+        lambda d, k, v: ht_mod.insert_rdma(
+            ht_mod.DHashTable(win=window.Window(data=d), nslots=64,
+                              val_words=1),
+            k, v, promise=Promise.CRW, max_probes=1,
+            fused=True)[0].win.data,
+        ht.win.data, keys, kvals)
+
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,516 @@
+"""Differential conformance suite (DESIGN.md §4): every backend — the
+python oracle, `am`, `rdma`, `rdma_fused`, and the adaptive `auto` — must
+produce bit-identical *visible* results (ok/found flags, values) for the
+same randomized op sequences, before the adaptive chooser is allowed to
+swap backends under traffic.
+
+Semantic domain: inserts use values derived deterministically from the key
+(val = f(key)), so duplicate-key inserts are idempotent and the RDMA
+engine's insert-only semantics agree with the RPC handler's
+insert-or-assign (the paper's §II-B expressivity asymmetry) on everything a
+reader can observe. Edge cases that depend on slot-level occupancy
+(full-table, full-ring, empty-pop) are checked backend-vs-backend, where
+the probe/ticket semantics are identical by construction.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adaptive as ad_mod
+from repro.core import am as am_mod
+from repro.core import hashtable as ht_mod
+from repro.core import queue as q_mod
+from repro.core.types import Promise
+
+P = 4
+VW = 1
+HT_BACKENDS = ("am", "rdma", "rdma_fused", "auto")
+Q_BACKENDS = ("am", "rdma", "rdma_fused", "auto")
+
+
+def _val_of(keys):
+    """Deterministic value for a key (idempotent duplicate inserts)."""
+    return ((keys * 31 + 7) & 0x7FFFFF)[..., None]
+
+
+def _np_val_of(key):
+    return (key * 31 + 7) & 0x7FFFFF
+
+
+# ---------------------------------------------------------------------------
+# Backend runners: execute one insert or find batch on a named backend.
+# Each runner owns its table copy; `auto` cycles arms via round_robin so a
+# multi-batch sequence crosses every arm boundary.
+# ---------------------------------------------------------------------------
+class HtRunner:
+    def __init__(self, backend, nslots=64, max_probes=8):
+        self.backend = backend
+        self.max_probes = max_probes
+        self.ht = ht_mod.make_hashtable(P, nslots, VW)
+        self.eng = am_mod.AMEngine(P)
+        ht_mod.build_am_handlers(self.ht, self.eng, max_probes=max_probes)
+        if backend == "auto":
+            self.auto = ad_mod.AdaptiveEngine(P, am_engine=self.eng,
+                                              policy="round_robin")
+
+    def insert(self, keys, valid=None):
+        vals = _val_of(keys)
+        if self.backend == "am":
+            self.ht, ok, _ = ht_mod.insert_rpc(self.ht, self.eng, keys,
+                                               vals, valid=valid)
+        elif self.backend == "auto":
+            self.ht, ok, _ = self.auto.ht_insert(
+                self.ht, keys, vals, promise=Promise.CRW, valid=valid,
+                max_probes=self.max_probes)
+        else:
+            self.ht, ok, _ = ht_mod.insert_rdma(
+                self.ht, keys, vals, promise=Promise.CRW, valid=valid,
+                max_probes=self.max_probes,
+                fused=self.backend == "rdma_fused")
+        return np.asarray(ok)
+
+    def find(self, keys, promise=Promise.CR, valid=None):
+        if self.backend == "am":
+            found, vals = ht_mod.find_rpc(self.ht, self.eng, keys,
+                                          valid=valid)
+        elif self.backend == "auto":
+            self.ht, found, vals = self.auto.ht_find(
+                self.ht, keys, promise=promise, valid=valid,
+                max_probes=self.max_probes)
+        else:
+            self.ht, found, vals = ht_mod.find_rdma(
+                self.ht, keys, promise=promise, valid=valid,
+                max_probes=self.max_probes,
+                fused=self.backend == "rdma_fused")
+        return np.asarray(found), np.asarray(vals)
+
+
+class HtOracle:
+    """Plain python dict applied in the engine's (src_rank, slot)
+    serialization order. Valid only while the table has headroom (probe
+    failures are slot-level, which a dict cannot see)."""
+
+    def __init__(self):
+        self.d = {}
+
+    def insert(self, keys, valid=None):
+        k = np.asarray(keys)
+        v = np.ones(k.shape, bool) if valid is None else np.asarray(valid)
+        for key, ok in zip(k.ravel().tolist(), v.ravel().tolist()):
+            if ok:
+                self.d[key] = _np_val_of(key)
+        return v
+
+    def find(self, keys, valid=None):
+        k = np.asarray(keys)
+        v = np.ones(k.shape, bool) if valid is None else np.asarray(valid)
+        found = np.zeros(k.shape, bool)
+        vals = np.zeros(k.shape + (VW,), np.int32)
+        it = np.nditer(k, flags=["multi_index"])
+        for key in it:
+            idx = it.multi_index
+            if v[idx] and int(key) in self.d:
+                found[idx] = True
+                vals[idx] = self.d[int(key)]
+        return found, vals
+
+
+def _distinct_keys(rng, shape, used=None):
+    used = set() if used is None else used
+    out = np.empty(int(np.prod(shape)), np.int64)
+    i = 0
+    while i < out.size:
+        k = int(rng.integers(1, 1 << 30))
+        if k not in used:
+            used.add(k)
+            out[i] = k
+            i += 1
+    return jnp.asarray(out.reshape(shape), jnp.int32)
+
+
+def _assert_all_agree(results, label):
+    names = list(results)
+    ref = results[names[0]]
+    for name in names[1:]:
+        np.testing.assert_array_equal(
+            ref, results[name],
+            err_msg=f"{label}: {names[0]} != {name}")
+
+
+# ---------------------------------------------------------------------------
+# Hash table
+# ---------------------------------------------------------------------------
+def test_ht_random_sequences_all_backends_agree():
+    """Multi-batch insert/find sequences with distinct keys: ok flags, found
+    flags and values are bit-identical across backends and match the dict
+    oracle."""
+    rng = np.random.default_rng(0)
+    runners = {b: HtRunner(b, nslots=128) for b in HT_BACKENDS}
+    oracle = HtOracle()
+    used: set = set()
+    inserted = []
+    for step in range(4):
+        keys = _distinct_keys(rng, (P, 6), used)
+        inserted.append(keys)
+        oks = {b: r.insert(keys) for b, r in runners.items()}
+        oks["oracle"] = oracle.insert(keys)
+        _assert_all_agree(oks, f"insert ok step {step}")
+        # probe: half previously inserted keys, half fresh (missing) keys
+        probe = jnp.concatenate(
+            [inserted[rng.integers(0, len(inserted))][:, :3],
+             _distinct_keys(rng, (P, 3), used)], axis=1)
+        founds = {b: r.find(probe) for b, r in runners.items()}
+        founds["oracle"] = oracle.find(probe)
+        _assert_all_agree({b: f[0] for b, f in founds.items()},
+                          f"found step {step}")
+        _assert_all_agree({b: f[1] for b, f in founds.items()},
+                          f"find vals step {step}")
+
+
+def test_ht_duplicate_keys_within_batch_agree():
+    """Same-batch duplicate keys (idempotent values): RDMA claims a second
+    slot, RPC updates in place — visible results must not differ."""
+    rng = np.random.default_rng(1)
+    runners = {b: HtRunner(b, nslots=128) for b in HT_BACKENDS}
+    oracle = HtOracle()
+    base = _distinct_keys(rng, (P, 3))
+    dup = jnp.concatenate([base, base[:, :2], jnp.roll(base[:, :1], 1, 0)],
+                         axis=1)
+    oks = {b: r.insert(dup) for b, r in runners.items()}
+    oks["oracle"] = oracle.insert(dup)
+    _assert_all_agree(oks, "duplicate insert ok")
+    founds = {b: r.find(base) for b, r in runners.items()}
+    founds["oracle"] = oracle.find(base)
+    _assert_all_agree({b: f[0] for b, f in founds.items()}, "dup found")
+    _assert_all_agree({b: f[1] for b, f in founds.items()}, "dup vals")
+
+
+def test_ht_duplicate_keys_across_batches_agree():
+    rng = np.random.default_rng(2)
+    runners = {b: HtRunner(b, nslots=128) for b in HT_BACKENDS}
+    keys = _distinct_keys(rng, (P, 4))
+    for _ in range(3):  # re-insert the same keys three times
+        oks = {b: r.insert(keys) for b, r in runners.items()}
+        _assert_all_agree(oks, "re-insert ok")
+    founds = {b: r.find(keys) for b, r in runners.items()}
+    _assert_all_agree({b: f[0] for b, f in founds.items()}, "re-found")
+    _assert_all_agree({b: f[1] for b, f in founds.items()}, "re-vals")
+
+
+def _keys_per_owner(rng, per_owner, used):
+    """(P, per_owner) distinct keys, row p all owned by rank p (rejection
+    sampled against the engine's hash placement)."""
+    from repro.core.hashtable import hash_mix
+    out = [[] for _ in range(P)]
+    while any(len(row) < per_owner for row in out):
+        k = int(rng.integers(1, 1 << 30))
+        owner = int(np.asarray(hash_mix(jnp.int32(k)) % np.uint32(P)))
+        if k not in used and len(out[owner]) < per_owner:
+            used.add(k)
+            out[owner].append(k)
+    return jnp.asarray(out, jnp.int32)
+
+
+def test_ht_full_table_fill_and_overflow_agree():
+    """Saturate a tiny table (max_probes == nslots, exactly nslots keys per
+    owner: every op can reach every slot, so the fill succeeds everywhere
+    and deterministically), then overflow it: with zero free slots, every
+    backend must fail every further insert identically, and every fill key
+    stays findable with identical values.
+
+    (Partial-fill probe-exhaustion races are deliberately out of the
+    conformance domain: WHICH op wins a nearly-full region legitimately
+    differs between the phase-wise RDMA engine and the op-sequential AM
+    handler — both are linearizable, but not bit-identical.)"""
+    rng = np.random.default_rng(3)
+    nslots = 4
+    runners = {b: HtRunner(b, nslots=nslots, max_probes=nslots)
+               for b in HT_BACKENDS}
+    used: set = set()
+    fill = _keys_per_owner(rng, nslots, used)
+    oks = {b: r.insert(fill) for b, r in runners.items()}
+    _assert_all_agree(oks, "fill insert ok")
+    assert next(iter(oks.values())).all()  # table now completely full
+    over = _distinct_keys(rng, (P, 3), used)
+    oks = {b: r.insert(over) for b, r in runners.items()}
+    _assert_all_agree(oks, "overflow insert ok")
+    assert not next(iter(oks.values())).any()
+    probe = jnp.concatenate([fill, over], axis=1)
+    founds = {b: r.find(probe) for b, r in runners.items()}
+    _assert_all_agree({b: f[0] for b, f in founds.items()}, "overflow found")
+    _assert_all_agree({b: f[1] for b, f in founds.items()}, "overflow vals")
+    ref = next(iter(founds.values()))[0]
+    np.testing.assert_array_equal(ref[:, :nslots], True)
+    np.testing.assert_array_equal(ref[:, nslots:], False)
+
+
+def test_ht_missing_keys_and_valid_mask_agree():
+    rng = np.random.default_rng(4)
+    runners = {b: HtRunner(b, nslots=64) for b in HT_BACKENDS}
+    used: set = set()
+    keys = _distinct_keys(rng, (P, 5), used)
+    valid = jnp.asarray(rng.integers(0, 2, (P, 5)).astype(bool))
+    for b, r in runners.items():
+        r.insert(keys, valid=valid)
+    probe = jnp.concatenate([keys, _distinct_keys(rng, (P, 3), used)],
+                            axis=1)
+    founds = {b: r.find(probe) for b, r in runners.items()}
+    _assert_all_agree({b: f[0] for b, f in founds.items()}, "masked found")
+    _assert_all_agree({b: f[1] for b, f in founds.items()}, "masked vals")
+    # only ops valid at insert time are findable
+    ref = next(iter(founds.values()))[0]
+    np.testing.assert_array_equal(ref[:, :5], np.asarray(valid))
+
+
+def test_ht_crw_locked_find_agrees_with_cr():
+    """The C_RW read-locked find path returns the same visible results as
+    C_R on a quiescent table, on every RDMA engine and vs the oracle."""
+    rng = np.random.default_rng(5)
+    runners = {b: HtRunner(b, nslots=64) for b in ("rdma", "rdma_fused",
+                                                   "auto")}
+    oracle = HtOracle()
+    keys = _distinct_keys(rng, (P, 6))
+    for r in runners.values():
+        r.insert(keys)
+    oracle.insert(keys)
+    founds = {b: r.find(keys, promise=Promise.CRW)
+              for b, r in runners.items()}
+    founds["oracle"] = oracle.find(keys)
+    _assert_all_agree({b: f[0] for b, f in founds.items()}, "crw found")
+    _assert_all_agree({b: f[1] for b, f in founds.items()}, "crw vals")
+
+
+# ---------------------------------------------------------------------------
+# Queue
+# ---------------------------------------------------------------------------
+class QRunner:
+    def __init__(self, backend, capacity=64):
+        self.backend = backend
+        self.q = q_mod.make_queue(P, host=1, capacity=capacity, val_words=VW)
+        self.eng = am_mod.AMEngine(P)
+        q_mod.build_am_handlers(self.q, self.eng)
+        if backend == "auto":
+            self.auto = ad_mod.AdaptiveEngine(P, am_engine=self.eng,
+                                              policy="round_robin")
+
+    def push(self, vals, valid=None):
+        if self.backend == "am":
+            self.q, ok = q_mod.push_rpc(self.q, self.eng, vals, valid=valid)
+        elif self.backend == "auto":
+            self.q, ok = self.auto.q_push(self.q, vals, promise=Promise.CRW,
+                                          valid=valid)
+        else:
+            self.q, ok = q_mod.push_rdma(
+                self.q, vals, promise=Promise.CRW, valid=valid,
+                planned=self.backend == "rdma_fused")
+        return np.asarray(ok)
+
+    def pop(self, n):
+        if self.backend == "am":
+            self.q, got, vals = q_mod.pop_rpc(self.q, self.eng, n)
+        elif self.backend == "auto":
+            self.q, got, vals = self.auto.q_pop(self.q, n,
+                                                promise=Promise.CRW)
+        else:
+            self.q, got, vals = q_mod.pop_rdma(
+                self.q, n, promise=Promise.CRW,
+                planned=self.backend == "rdma_fused")
+        return np.asarray(got), np.asarray(vals)
+
+
+class QOracle:
+    """Bounded FIFO fed in the engine's (src_rank, slot) order."""
+
+    def __init__(self, capacity):
+        self.fifo: list = []
+        self.capacity = capacity
+
+    def push(self, vals, valid=None):
+        v = np.asarray(vals)
+        ok_in = (np.ones(v.shape[:2], bool) if valid is None
+                 else np.asarray(valid))
+        ok = np.zeros(v.shape[:2], bool)
+        for p in range(v.shape[0]):
+            for i in range(v.shape[1]):
+                if ok_in[p, i] and len(self.fifo) < self.capacity:
+                    self.fifo.append(v[p, i].copy())
+                    ok[p, i] = True
+        return ok
+
+    def pop(self, n):
+        got = np.zeros((P, n), bool)
+        vals = np.zeros((P, n, VW), np.int32)
+        for p in range(P):
+            for i in range(n):
+                if self.fifo:
+                    vals[p, i] = self.fifo.pop(0)
+                    got[p, i] = True
+        return got, vals
+
+
+def _batch_vals(rng, n):
+    return jnp.asarray(rng.integers(1, 1 << 20, (P, n, VW)), jnp.int32)
+
+
+def test_queue_push_pop_sequences_agree():
+    """Interleaved push/pop batches: got flags and popped values are
+    bit-identical across backends and match the FIFO oracle (the owner
+    services both engines' batches in the same (src, slot) order)."""
+    rng = np.random.default_rng(10)
+    runners = {b: QRunner(b, capacity=512) for b in Q_BACKENDS}
+    oracle = QOracle(512)
+    for step in range(4):
+        vals = _batch_vals(rng, 5)
+        oks = {b: r.push(vals) for b, r in runners.items()}
+        oks["oracle"] = oracle.push(vals)
+        _assert_all_agree(oks, f"push ok step {step}")
+        pops = {b: r.pop(3) for b, r in runners.items()}
+        pops["oracle"] = oracle.pop(3)
+        _assert_all_agree({b: g for b, (g, _) in pops.items()},
+                          f"pop got step {step}")
+        _assert_all_agree({b: v for b, (_, v) in pops.items()},
+                          f"pop vals step {step}")
+
+
+def test_queue_empty_pop_agree():
+    runners = {b: QRunner(b) for b in Q_BACKENDS}
+    for b, r in runners.items():
+        got, vals = r.pop(4)
+        assert not got.any(), b
+        assert (vals == 0).all(), b
+    # pop-after-drain: push 2, pop 8, pop again
+    rng = np.random.default_rng(11)
+    vals = _batch_vals(rng, 1)  # P pushes total
+    for r in runners.values():
+        r.push(vals)
+    pops = {b: r.pop(8) for b, r in runners.items()}
+    _assert_all_agree({b: g for b, (g, _) in pops.items()}, "drain got")
+    _assert_all_agree({b: v for b, (_, v) in pops.items()}, "drain vals")
+    again = {b: r.pop(2) for b, r in runners.items()}
+    for b, (g, _) in again.items():
+        assert not g.any(), b
+
+
+def test_queue_full_ring_overflow_agree():
+    """Pushes beyond ring capacity fail the same ops on every backend and
+    the surviving FIFO contents stay identical."""
+    rng = np.random.default_rng(12)
+    cap = 8
+    runners = {b: QRunner(b, capacity=cap) for b in Q_BACKENDS}
+    oracle = QOracle(cap)
+    vals = _batch_vals(rng, 4)  # P*4 = 16 pushes into 8 slots
+    oks = {b: r.push(vals) for b, r in runners.items()}
+    oks["oracle"] = oracle.push(vals)
+    _assert_all_agree(oks, "overflow push ok")
+    assert int(next(iter(oks.values())).sum()) == cap
+    pops = {b: r.pop(4) for b, r in runners.items()}
+    pops["oracle"] = oracle.pop(4)
+    _assert_all_agree({b: g for b, (g, _) in pops.items()}, "overflow got")
+    _assert_all_agree({b: v for b, (_, v) in pops.items()}, "overflow vals")
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-specific conformance
+# ---------------------------------------------------------------------------
+def test_auto_arm_switches_mid_sequence_are_invisible():
+    """The round-robin auto runner crosses every arm boundary; its decision
+    log must show all arms were actually exercised, and (asserted above)
+    results never differ. This pins that conformance covered the chooser,
+    not a degenerate single-arm run."""
+    rng = np.random.default_rng(13)
+    r = HtRunner("auto", nslots=128)
+    used: set = set()
+    for _ in range(4):
+        keys = _distinct_keys(rng, (P, 4), used)
+        r.insert(keys)
+        r.find(keys)
+    arms = {d.arm for d in r.auto.log}
+    assert arms == set(ad_mod.ARMS)
+    assert all(d.batch_ops == P * 4 for d in r.auto.log)
+
+
+def test_auto_cost_policy_conformant_and_logged():
+    """The real (cost-driven) policy: results equal the rdma_fused
+    reference on the same sequence, and every batch logged a Decision with
+    scores for all arms."""
+    rng = np.random.default_rng(14)
+    auto = HtRunner("auto", nslots=128)
+    auto.auto = ad_mod.AdaptiveEngine(P, am_engine=auto.eng, policy="cost",
+                                      measure=True)
+    ref = HtRunner("rdma_fused", nslots=128)
+    used: set = set()
+    for _ in range(3):
+        keys = _distinct_keys(rng, (P, 4), used)
+        ok_a, ok_r = auto.insert(keys), ref.insert(keys)
+        np.testing.assert_array_equal(ok_a, ok_r)
+        fa, fr = auto.find(keys), ref.find(keys)
+        np.testing.assert_array_equal(fa[0], fr[0])
+        np.testing.assert_array_equal(fa[1], fr[1])
+    assert len(auto.auto.log) == 6
+    for dec in auto.auto.log:
+        assert dec.arm in ad_mod.ARMS
+        assert set(dec.scores) == set(ad_mod.ARMS)
+        assert dec.skew >= 1.0
+    # measured EWMAs were fed back for the chosen arms
+    assert auto.auto.ewma
+
+
+def test_skew_statistic_matches_route_plan():
+    """adaptive.batch_skew (host-side bincount) equals routing.plan_skew
+    (derived from the exchanged plan occupancy) on random destination
+    batches — the chooser sees the same statistic the engine would."""
+    from repro.core import routing
+    rng = np.random.default_rng(15)
+    for _ in range(4):
+        dst = jnp.asarray(rng.integers(0, P, (P, 9)), jnp.int32)
+        plan = routing.make_plan(dst, cap=9)
+        np.testing.assert_allclose(ad_mod.batch_skew(dst, P),
+                                   float(routing.plan_skew(plan)), rtol=1e-6)
+    hot = jnp.zeros((P, 9), jnp.int32)
+    assert ad_mod.batch_skew(hot, P) == pytest.approx(P)
+    plan = routing.make_plan(hot, cap=9)
+    assert float(routing.plan_skew(plan)) == pytest.approx(P)
+
+
+def test_hypothesis_ht_conformance():
+    """Hypothesis-driven randomized sequences (skipped when hypothesis is
+    not installed, matching tests/test_properties.py)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.integers(1, 1 << 20), min_size=P * 4,
+                        max_size=P * 4, unique=True),
+               st.integers(0, 3))
+    @hyp.settings(max_examples=10, deadline=None)
+    def inner(key_list, nbatches_probe):
+        keys = jnp.asarray(np.array(key_list).reshape(P, 4), jnp.int32)
+        runners = {b: HtRunner(b, nslots=64) for b in HT_BACKENDS}
+        oks = {b: r.insert(keys) for b, r in runners.items()}
+        _assert_all_agree(oks, "hyp insert")
+        founds = {b: r.find(keys) for b, r in runners.items()}
+        _assert_all_agree({b: f[0] for b, f in founds.items()}, "hyp found")
+        _assert_all_agree({b: f[1] for b, f in founds.items()}, "hyp vals")
+
+    inner()
+
+
+def test_hypothesis_queue_conformance():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.integers(1, 1 << 20), min_size=P * 3,
+                        max_size=P * 3))
+    @hyp.settings(max_examples=10, deadline=None)
+    def inner(val_list):
+        vals = jnp.asarray(np.array(val_list).reshape(P, 3, VW), jnp.int32)
+        runners = {b: QRunner(b, capacity=32) for b in Q_BACKENDS}
+        oracle = QOracle(32)
+        oks = {b: r.push(vals) for b, r in runners.items()}
+        oks["oracle"] = oracle.push(vals)
+        _assert_all_agree(oks, "hyp push")
+        pops = {b: r.pop(4) for b, r in runners.items()}
+        pops["oracle"] = oracle.pop(4)
+        _assert_all_agree({b: g for b, (g, _) in pops.items()}, "hyp got")
+        _assert_all_agree({b: v for b, (_, v) in pops.items()}, "hyp vals")
+
+    inner()

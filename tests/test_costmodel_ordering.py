@@ -1,0 +1,191 @@
+"""Cost-model ordering regression (satellite of ISSUE 3): for both
+parameter sets (the paper's Cori/Aries Table I and the derived TPU v5e ICI
+constants) `predict` must rank implementations the way the paper's
+Figs. 4–5 conclude, `calibrate` must round-trip measured component dicts
+(fused descriptors included), and the skew/attentiveness signals must move
+the ranking in the documented direction.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.types import Backend, OpStats, Promise
+
+PARAMS = [cm.CORI_PHASE1, cm.TPU_V5E_ICI]
+ATTENTIVE = OpStats(target_busy_us=0.0)
+
+
+@pytest.mark.parametrize("params", PARAMS, ids=lambda p: p.name)
+def test_fig5_hashtable_ordering(params):
+    """Fig. 5 conclusions: the bare C_R find is the cheapest operation of
+    all; the fully-atomic C_RW RDMA find (3 dependent atomic phases) is
+    more expensive than one AM round trip; the composite C_RW RDMA insert
+    loses to the AM insert while the C_W insert beats the C_RW insert."""
+    find_cr = cm.predict(cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA,
+                         ATTENTIVE, params)
+    find_am = cm.predict(cm.DSOp.HT_FIND, Promise.CRW, Backend.RPC,
+                         ATTENTIVE, params)
+    find_crw = cm.predict(cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA,
+                          ATTENTIVE, params)
+    assert find_cr < find_am < find_crw
+    ins_am = cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC,
+                        ATTENTIVE, params)
+    ins_crw = cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA,
+                         ATTENTIVE, params)
+    ins_cw = cm.predict(cm.DSOp.HT_INSERT, Promise.CW, Backend.RDMA,
+                        ATTENTIVE, params)
+    assert ins_am < ins_crw
+    assert ins_cw < ins_crw
+
+
+@pytest.mark.parametrize("params", PARAMS, ids=lambda p: p.name)
+def test_fig4_queue_ordering(params):
+    """Fig. 4 conclusions: C_L local push is essentially free; phasal C_W
+    beats fully-atomic C_RW; the checksum queue removes the publish CAS and
+    lands at the C_W cost; one AM round trip beats the composite C_RW
+    RDMA push at an attentive target."""
+    local = cm.predict(cm.DSOp.Q_PUSH, Promise.CL, Backend.RDMA,
+                       ATTENTIVE, params)
+    cw = cm.predict(cm.DSOp.Q_PUSH, Promise.CW, Backend.RDMA,
+                    ATTENTIVE, params)
+    crw = cm.predict(cm.DSOp.Q_PUSH, Promise.CRW, Backend.RDMA,
+                     ATTENTIVE, params)
+    csum = cm.predict_checksum_push(ATTENTIVE, params)
+    am = cm.predict(cm.DSOp.Q_PUSH, Promise.CRW, Backend.RPC,
+                    ATTENTIVE, params)
+    assert local < cw <= crw
+    assert csum == pytest.approx(cw)
+    assert csum < crw
+    assert am < crw
+
+
+@pytest.mark.parametrize("params", PARAMS, ids=lambda p: p.name)
+def test_attentiveness_flips_insert_winner(params):
+    """The paper's punchline operationalized: at an attentive target the AM
+    insert wins; once the target intersperses enough compute, the one-sided
+    path takes over (choose_backend flips), and a progress thread restores
+    the AM side at a constant factor."""
+    assert cm.choose_backend(cm.DSOp.HT_INSERT, Promise.CRW,
+                             ATTENTIVE, params) == Backend.RPC
+    busy = OpStats(target_busy_us=1000.0)
+    assert cm.choose_backend(cm.DSOp.HT_INSERT, Promise.CRW,
+                             busy, params) == Backend.RDMA
+    pt = OpStats(target_busy_us=1000.0, progress_thread=True)
+    assert (cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC, pt,
+                       params)
+            < cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC, busy,
+                         params))
+
+
+@pytest.mark.parametrize("params", PARAMS, ids=lambda p: p.name)
+def test_fused_engine_preserves_ordering_and_never_costs_more(params):
+    for op, promise in ((cm.DSOp.HT_INSERT, Promise.CRW),
+                        (cm.DSOp.HT_INSERT, Promise.CW),
+                        (cm.DSOp.HT_FIND, Promise.CRW)):
+        fused = cm.predict(op, promise, Backend.RDMA, ATTENTIVE, params,
+                           fused=True)
+        seed = cm.predict(op, promise, Backend.RDMA, ATTENTIVE, params,
+                          fused=False)
+        assert fused <= seed, (op, promise)
+    # the C_R find ordering survives fusion of its competitors
+    assert (cm.predict(cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA,
+                       ATTENTIVE, params)
+            < cm.predict(cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA,
+                         ATTENTIVE, params, fused=True))
+
+
+def test_calibrate_round_trips_measured_components():
+    """calibrate() must take a benchmarks/components.py-style measured dict
+    — fused descriptors included — and report exactly those numbers back
+    through the dataclass and the fused accessors."""
+    measured = {"W": 1.5, "R": 2.5, "A_cas": 3.25, "A_fao": 3.5,
+                "am_rt": 4.75, "handler": 0.125, "local": 0.0625,
+                "amo_apply": 0.375, "A_cas_put": 3.75, "A_cas_put_pub": 4.0,
+                "A_fao_get": 4.25}
+    cal = cm.calibrate(measured)
+    assert cal.name == "calibrated"
+    for k, v in measured.items():
+        assert getattr(cal, k) == v, k
+    assert cal.fused_cas_put() == measured["A_cas_put"]
+    assert cal.fused_cas_put_pub() == measured["A_cas_put_pub"]
+    assert cal.fused_fao_get() == measured["A_fao_get"]
+    # unknown keys are ignored, untouched fields keep the base values
+    cal2 = cm.calibrate({"W": 9.0, "not_a_component": 1.0})
+    assert cal2.W == 9.0 and cal2.R == cm.CORI_PHASE1.R
+    assert cal2.pt_overhead == cm.CORI_PHASE1.pt_overhead
+
+
+def test_calibrate_without_fused_numbers_derives_them_from_atomics():
+    cal = cm.calibrate({"A_cas": 2.0, "A_fao": 2.25})
+    assert cal.A_cas_put is None
+    assert cal.fused_cas_put() == 2.0
+    assert cal.fused_fao_get() == 2.25
+
+
+def test_predictions_linear_in_calibrated_components():
+    """predict() with calibrated params equals the Table II formula applied
+    to the measured numbers — the calibration path cannot drift from the
+    analytical model."""
+    cal = cm.calibrate({"W": 2.0, "R": 3.0, "A_cas": 4.0, "A_fao": 5.0,
+                        "am_rt": 6.0, "handler": 0.5, "amo_apply": 0.0})
+    got = cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA,
+                     OpStats(expected_probes=2.0), cal)
+    assert got == pytest.approx(2.0 * 4.0 + 2.0 + 5.0)   # 2×A_cas + W + A_fao
+    got = cm.predict(cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA, None, cal)
+    assert got == pytest.approx(5.0 + 3.0 + 5.0)         # A_fao + R + A_fao
+    got = cm.predict(cm.DSOp.Q_PUSH, Promise.CRW, Backend.RDMA,
+                     OpStats(contention=3.0), cal)
+    assert got == pytest.approx(5.0 + 2.0 + 3.0 * 4.0)   # A_fao + W + 3×A_cas
+
+
+def test_skew_raises_rdma_faster_than_rpc_and_flips_choice():
+    """The adaptive layer's skew signal: on owner-lane hardware (amo_apply
+    > 0) a skewed batch inflates the one-sided atomics by amo_apply×skew
+    per phase while the AM side only scales its (much smaller) handler
+    term; with a calibrated set where RDMA wins uniform batches, skew=P
+    must flip the chooser to the AM arm."""
+    p = cm.TPU_V5E_ICI
+    uni = OpStats(skew=1.0)
+    hot = OpStats(skew=8.0)
+    d_rdma = (cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA, hot,
+                         p, fused=True)
+              - cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RDMA,
+                           uni, p, fused=True))
+    d_rpc = (cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC, hot, p)
+             - cm.predict(cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC, uni,
+                          p))
+    assert d_rdma > d_rpc > 0
+    # calibrated host where the fused one-sided insert wins uniform batches
+    cal = cm.calibrate({"W": 1.0, "R": 1.5, "A_cas": 1.8, "A_fao": 1.8,
+                        "am_rt": 2.6, "handler": 0.1, "amo_apply": 0.3},
+                       base=cm.TPU_V5E_ICI)
+    assert cm.predict_arm(cm.DSOp.HT_INSERT, Promise.CW, "rdma_fused",
+                          uni, cal) < cm.predict_arm(
+        cm.DSOp.HT_INSERT, Promise.CW, "am", uni, cal)
+    assert cm.predict_arm(cm.DSOp.HT_INSERT, Promise.CW, "rdma_fused",
+                          hot, cal) > cm.predict_arm(
+        cm.DSOp.HT_INSERT, Promise.CW, "am", hot, cal)
+
+
+def test_predict_arm_covers_all_arms_and_matches_predict():
+    s = OpStats(target_busy_us=4.0)
+    for params in PARAMS:
+        assert cm.predict_arm(cm.DSOp.Q_POP, Promise.CR, "rdma", s,
+                              params) == cm.predict(
+            cm.DSOp.Q_POP, Promise.CR, Backend.RDMA, s, params)
+        assert cm.predict_arm(cm.DSOp.HT_FIND, Promise.CRW, "rdma_fused",
+                              s, params) == cm.predict(
+            cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA, s, params,
+            fused=True)
+        am = cm.predict_arm(cm.DSOp.HT_INSERT, Promise.CRW, "am", s, params)
+        pt = cm.predict_arm(cm.DSOp.HT_INSERT, Promise.CRW, "am_pt", s,
+                            params)
+        assert am == cm.predict(
+            cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC, s, params)
+        assert pt == cm.predict(
+            cm.DSOp.HT_INSERT, Promise.CRW, Backend.RPC,
+            dataclasses.replace(s, progress_thread=True), params)
+        assert am != pt  # busy target: the PT arm actually differs
+    with pytest.raises(ValueError):
+        cm.predict_arm(cm.DSOp.HT_FIND, Promise.CR, "nope")
