@@ -116,6 +116,29 @@ def gen_batch_keys(P: int, n: int, scenario: str, rng: np.random.Generator,
                             used)
 
 
+def gen_zipf_dup_keys(P: int, n: int, rng: np.random.Generator,
+                      alpha: float = 1.1, nkeys: int = 48,
+                      hot_owner: Optional[int] = None) -> np.ndarray:
+    """One (P, n) batch of keys drawn zipfian(alpha) over a fixed key
+    universe — the DUPLICATE-heavy counterpart of gen_batch_keys (which
+    skews owners but keeps keys distinct). p(rank-r key) ∝ 1/r^alpha, so a
+    batch repeats its hot keys many times: the traffic sender-side
+    coalescing (DESIGN.md §6) collapses. hot_owner pins every universe key
+    to one owner rank (hot-owner AND duplicate-heavy — the acceptance
+    workload for the coalescing benchmark)."""
+    if hot_owner is not None:
+        targets = np.full((1, nkeys), hot_owner, np.int64)
+        universe = keys_for_targets(targets, P, rng).ravel()
+    else:
+        universe = np.array(sorted(
+            {int(k) for k in rng.integers(1, (1 << 31) - 2, 4 * nkeys)}
+        )[:nkeys], np.int64)
+        rng.shuffle(universe)
+    probs = 1.0 / np.arange(1, nkeys + 1, dtype=np.float64) ** alpha
+    probs /= probs.sum()
+    return rng.choice(universe, size=(P, n), p=probs).astype(np.int32)
+
+
 class Csv:
     def __init__(self, header):
         self.header = header

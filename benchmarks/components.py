@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import sys
 
 import numpy as np
 import jax
@@ -29,7 +30,7 @@ from repro.core import routing
 from repro.core import window
 from repro.core.types import AmoKind
 
-from .common import Csv, time_op
+from .common import Csv, gen_zipf_dup_keys, time_op
 
 LOCAL = 4096
 
@@ -154,6 +155,78 @@ def calibrated_costs(rows) -> cm.ComponentCosts:
     })
 
 
+# ---------------------------------------------------------------------------
+# Coalescing acceptance workload (DESIGN.md §6): hot-owner, zipfian
+# duplicate-heavy hash-table insert+find — sender-side combining vs the
+# PR 3 planned/fused path on the SAME batch.
+# ---------------------------------------------------------------------------
+def bench_coalescing(P: int = 8, n: int = 64, alpha: float = 1.1,
+                     nkeys: int = 48, iters: int = 9,
+                     max_probes: int = 48, nslots: int = 4096):
+    """Returns a row dict: µs/op for the fused and fused+coalesced engines
+    on a hot-owner zipfian insert+find workload, plus the measured wire
+    statistics (dedup ratio, request payload rows per probe phase) —
+    `payload_rows_*` from the coalescing structure, `engine_rows_coalesced`
+    independently from the engine's own phase log, so the smoke gate can
+    cross-check that the wire actually shrank."""
+    from repro.core import window as win_mod
+    from repro.core.types import Promise
+
+    rng = np.random.default_rng(7)
+    keys = jnp.asarray(gen_zipf_dup_keys(P, n, rng, alpha=alpha,
+                                         nkeys=nkeys, hot_owner=0),
+                       jnp.int32)
+    vals = ((keys * 31 + 7) & 0x7FFFFF)[..., None]
+    base = ht_mod.make_hashtable(P, nslots, 1)
+    ops = P * n
+
+    def wrap(data):
+        return ht_mod.DHashTable(win=window.Window(data=data), nslots=nslots,
+                                 val_words=1)
+
+    def insert_find(coalesce):
+        def fn(data):
+            ht, ok, _ = ht_mod.insert_rdma(
+                wrap(data), keys, vals, promise=Promise.CRW,
+                max_probes=max_probes, fused=True, coalesce=coalesce)
+            ht, f, v = ht_mod.find_rdma(
+                ht, keys, promise=Promise.CR, max_probes=max_probes,
+                fused=True, coalesce=coalesce)
+            return ht.win.data, f, v
+        return fn
+
+    us_fused = time_op(insert_find(False), base.win.data, iters=iters,
+                       ops_per_call=ops)
+    us_coalesced = time_op(insert_find(True), base.win.data, iters=iters,
+                           ops_per_call=ops)
+
+    # Wire statistics. payload_rows_* come from the coalescing structure
+    # the insert's CoalescedPlan uses; engine_rows_coalesced is measured
+    # INDEPENDENTLY, from the rows-out stats the engine records into its
+    # phase log while actually executing the coalesced workload — the two
+    # must agree or the engine is not shipping what the structure claims.
+    dst, start = ht_mod._place(base, keys)
+    payload = jnp.concatenate([keys[..., None], vals], axis=-1)
+    co = routing.coalesce(dst, start, match=payload)
+    rows_in = int(np.asarray(co.rows_in).sum())
+    rows_out = int(np.asarray(co.rows_out).sum())
+    win_mod.drain_phase_log()
+    with win_mod.decision_scope("bench_coalescing"):
+        insert_find(True)(base.win.data)
+    infos = [info for _, _, info in win_mod.drain_phase_log() if info]
+    engine_rows = infos[0]["rows_out"] if infos else None
+    return {
+        "ht_hot_insert_find_fused": us_fused,
+        "ht_hot_insert_find_coalesced": us_coalesced,
+        "coalesce_speedup": us_fused / us_coalesced if us_coalesced else None,
+        "dedup_ratio": rows_out / max(rows_in, 1),
+        "payload_rows_uncoalesced": rows_in,
+        "payload_rows_coalesced": rows_out,
+        "engine_rows_coalesced": engine_rows,
+        "alpha": alpha, "nkeys": nkeys, "n": n, "P": P,
+    }
+
+
 # Fused-vs-unfused pairing: fused op -> (unfused component sequence) for the
 # machine-readable artifact.
 FUSED_PAIRS = {
@@ -165,13 +238,16 @@ FUSED_PAIRS = {
 
 
 def emit_json(all_rows, out="artifacts/bench",
-              fname="BENCH_components.json"):
+              fname="BENCH_components.json", coalescing=None):
     """Machine-readable per-op µs + exchange counts + fused-vs-unfused
-    ratios, for cross-PR perf trajectories (consumed by future CI)."""
+    ratios (+ the coalescing acceptance row when measured), for cross-PR
+    perf trajectories (consumed by benchmarks/trajectory.py and CI)."""
     from repro.core.types import Backend, Promise
     report = {"benchmark": "components", "unit": "us_per_op",
               "rows": {str(P): rows for P, rows in all_rows.items()},
               "fused_vs_unfused": {}, "exchange_counts": {}}
+    if coalescing is not None:
+        report["coalescing"] = {str(r["P"]): r for r in coalescing}
     for P, rows in all_rows.items():
         pairs = {}
         for fused_op, seq in FUSED_PAIRS.items():
@@ -216,7 +292,12 @@ def main(out="artifacts/bench", ranks=(2, 4, 8, 16)):
         for op, us in rows.items():
             csv.add("components(fig3)", P, op, f"{us:.3f}")
     csv.dump(f"{out}/components.csv")
-    emit_json(all_rows, out=out)
+    co_row = bench_coalescing(P=8)
+    csv.add("coalescing", 8, "ht_hot_insert_find_fused",
+            f"{co_row['ht_hot_insert_find_fused']:.3f}")
+    csv.add("coalescing", 8, "ht_hot_insert_find_coalesced",
+            f"{co_row['ht_hot_insert_find_coalesced']:.3f}")
+    emit_json(all_rows, out=out, coalescing=[co_row])
     # structural findings (paper Fig. 3)
     r = all_rows[8] if 8 in all_rows else all_rows[max(all_rows)]
     print(f"# persistent_cas/single_cas = "
@@ -227,8 +308,51 @@ def main(out="artifacts/bench", ranks=(2, 4, 8, 16)):
           f"{(r['cas_single']+r['put'])/r['cas_put']:.2f}x")
     print(f"# fused fao_get vs fad+get: "
           f"{(r['fad']+r['get'])/r['fao_get']:.2f}x")
+    print(f"# coalescing hot-owner insert+find: "
+          f"{co_row['coalesce_speedup']:.2f}x at dedup ratio "
+          f"{co_row['dedup_ratio']:.2f}")
     return all_rows
 
 
+def smoke_coalesce(P: int = 8, n: int = 64, iters: int = 9,
+                   threshold: float = 1.3,
+                   update_artifact: bool = True) -> bool:
+    """Coalescing smoke gate (scripts/smoke.sh): hot-owner zipfian
+    insert+find must speed up >= `threshold` over the PR 3 planned/fused
+    path, the wire rows must actually shrink (dedup < 1), and the rows
+    the ENGINE logged while executing must equal the rows the coalescing
+    structure predicted. Folds its row into the existing
+    BENCH_components.json (written by the earlier smoke step) so the
+    workload runs once per smoke invocation."""
+    row = bench_coalescing(P=P, n=n, iters=iters)
+    print(f"fused      {row['ht_hot_insert_find_fused']:8.3f} us/op")
+    print(f"coalesced  {row['ht_hot_insert_find_coalesced']:8.3f} us/op")
+    print(f"speedup    {row['coalesce_speedup']:.2f}x "
+          f"(target >= {threshold}x)")
+    print(f"dedup ratio {row['dedup_ratio']:.3f}  payload rows "
+          f"{row['payload_rows_uncoalesced']} -> "
+          f"{row['payload_rows_coalesced']} "
+          f"(engine logged {row['engine_rows_coalesced']})")
+    rows_ok = (row["payload_rows_coalesced"]
+               < row["payload_rows_uncoalesced"]
+               and row["engine_rows_coalesced"]
+               == row["payload_rows_coalesced"])
+    if not rows_ok:
+        print("FAIL: engine-logged wire rows do not shrink as the "
+              "coalescing structure predicts")
+    if update_artifact:
+        p = pathlib.Path("artifacts/bench") / "BENCH_components.json"
+        if p.exists():
+            with open(p) as f:
+                report = json.load(f)
+            report.setdefault("coalescing", {})[str(P)] = row
+            with open(p, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"# updated coalescing row in {p}")
+    return bool(row["coalesce_speedup"] >= threshold) and rows_ok
+
+
 if __name__ == "__main__":
+    if "--smoke-coalesce" in sys.argv:
+        sys.exit(0 if smoke_coalesce() else 1)
     main()

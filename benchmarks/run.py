@@ -11,7 +11,7 @@ import traceback
 
 def main() -> None:
     from . import (adaptive_bench, attentiveness, components,
-                   hashtable_bench, queue_bench, roofline)
+                   hashtable_bench, queue_bench, roofline, trajectory)
     sections = [
         ("components (paper Fig. 3 / Table I)", components.main),
         ("queue push (paper Fig. 4)", queue_bench.main),
@@ -19,6 +19,7 @@ def main() -> None:
         ("attentiveness (paper Fig. 6)", attentiveness.main),
         ("adaptive backend selection (DESIGN.md §4)", adaptive_bench.main),
         ("roofline (assignment §Roofline)", roofline.main),
+        ("perf trajectory (BENCH_trajectory.json)", trajectory.main),
     ]
     failures = 0
     for title, fn in sections:

@@ -1,0 +1,144 @@
+"""Cumulative perf-trajectory file: per-PR medians of the benchmark
+artifacts, appended to BENCH_trajectory.json at the repo root so future
+PRs have a baseline to regress against.
+
+One entry per commit label (re-running under the same HEAD replaces the
+entry instead of appending). Medians are deliberately coarse — one number
+per (suite, config) — because the trajectory is for spotting cross-PR
+cliffs, not for microbenchmark archaeology; the full per-op numbers stay
+in artifacts/bench/BENCH_*.json.
+
+    python -m benchmarks.trajectory          # collect + update from the
+                                             # existing artifacts
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+from typing import Optional
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+TRAJECTORY = REPO / "BENCH_trajectory.json"
+BENCH_DIR = REPO / "artifacts" / "bench"
+
+
+def _git_label() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=REPO,
+                             timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return "unknown"
+
+
+def _median(vals) -> Optional[float]:
+    vals = sorted(v for v in vals if isinstance(v, (int, float)))
+    if not vals:
+        return None
+    mid = len(vals) // 2
+    return (vals[mid] if len(vals) % 2
+            else (vals[mid - 1] + vals[mid]) / 2.0)
+
+
+def _load(fname: str) -> Optional[dict]:
+    p = BENCH_DIR / fname
+    if not p.exists():
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def _csv_medians(fname: str, impl_col: str, val_col: str) -> dict:
+    """Per-impl median over a benchmark CSV's numeric value column."""
+    p = BENCH_DIR / fname
+    if not p.exists():
+        return {}
+    rows = p.read_text().strip().splitlines()
+    header = rows[0].split(",")
+    try:
+        i_impl, i_val = header.index(impl_col), header.index(val_col)
+    except ValueError:
+        return {}
+    by_impl: dict = {}
+    for line in rows[1:]:
+        cells = line.split(",")
+        try:
+            by_impl.setdefault(cells[i_impl], []).append(float(cells[i_val]))
+        except (ValueError, IndexError):
+            continue
+    return {impl: _median(v) for impl, v in by_impl.items()}
+
+
+def collect() -> dict:
+    """One trajectory entry from whatever artifacts currently exist."""
+    entry: dict = {"label": _git_label()}
+
+    comp = _load("BENCH_components.json")
+    if comp:
+        rows = comp.get("rows", {})
+        p8 = rows.get("8") or (rows[max(rows, key=int)] if rows else {})
+        entry["components"] = {
+            "median_us_per_op_P8": _median(p8.values()),
+            "ops": {k: v for k, v in sorted(p8.items())},
+        }
+        co = comp.get("coalescing", {}).get("8")
+        if co:
+            entry["components"]["coalescing"] = {
+                "speedup": co.get("coalesce_speedup"),
+                "dedup_ratio": co.get("dedup_ratio"),
+                "us_coalesced": co.get("ht_hot_insert_find_coalesced"),
+            }
+
+    ad = _load("BENCH_adaptive.json")
+    if ad:
+        scen = ad.get("scenarios", ad)
+        regrets = [s.get("regret") for s in scen.values()
+                   if isinstance(s, dict) and "regret" in s]
+        entry["adaptive"] = {
+            "median_regret": _median(regrets),
+            "scenarios": sorted(k for k in scen if isinstance(
+                scen[k], dict)),
+        }
+
+    ht = _csv_medians("hashtable.csv", "impl", "measured_us")
+    if ht:
+        entry["hashtable"] = {"median_us_per_impl": ht,
+                              "median_us": _median(ht.values())}
+    qb = _csv_medians("queue.csv", "impl", "measured_us")
+    if qb:
+        entry["queue"] = {"median_us_per_impl": qb,
+                          "median_us": _median(qb.values())}
+    return entry
+
+
+def update(path: pathlib.Path = TRAJECTORY) -> dict:
+    """Insert/replace this HEAD's entry in the trajectory file."""
+    entry = collect()
+    history = []
+    if path.exists():
+        try:
+            with open(path) as f:
+                history = json.load(f).get("entries", [])
+        except (json.JSONDecodeError, AttributeError):
+            history = []
+    history = [e for e in history if e.get("label") != entry["label"]]
+    history.append(entry)
+    doc = {"schema": "bench-trajectory-v1",
+           "note": "per-PR benchmark medians; latest entry last",
+           "entries": history}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# trajectory: {len(history)} entries -> {path}")
+    return doc
+
+
+def main():
+    update()
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== dev deps: hypothesis (property tests skip when unavailable) =="
+python -c "import hypothesis" 2>/dev/null \
+  || pip install --quiet hypothesis \
+  || echo "hypothesis unavailable (offline container); property tests stay skipped"
+
 echo "== tier-1 tests (new failures only fail CI) =="
 set +e
 python -m pytest -q --tb=no -rfE | tee /tmp/ci_pytest.out

@@ -10,6 +10,10 @@
 #    P=8, n=64 (target: >= 1.3x median speedup), which also refreshes
 #    artifacts/bench/BENCH_components.json for the perf trajectory.
 # 3. attentiveness fast path (seeded, seconds-scale Fig. 6 structure).
+# 4. coalescing gate (DESIGN.md §6, after the JSON artifact refresh it
+#    amends): hot-owner zipfian insert+find, coalesced vs the
+#    planned/fused path — >= 1.3x speedup, engine-logged wire rows
+#    matching the coalescing structure's dedup ratio.
 #
 # scripts/ci.sh is the CI-facing gate (tier-1 + adaptive + attentiveness).
 set -euo pipefail
@@ -35,5 +39,10 @@ from benchmarks import components
 rows = components.bench_components(P=8, iters=7)
 components.emit_json({8: rows})
 EOF
+
+echo "== coalescing gate (hot-owner insert+find, dedup ratio reported) =="
+# runs the workload ONCE: gates the speedup + wire-row cross-check, then
+# folds its row into the JSON artifact written above
+python -m benchmarks.components --smoke-coalesce
 
 echo "smoke OK"

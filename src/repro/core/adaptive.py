@@ -12,7 +12,7 @@ push/pop) picks one of four *arms*
     am          aggregated active messages
     am_pt       active messages serviced by a progress thread (Fig. 6 "PT")
 
-driven by `costmodel.predict_arm` over calibrated ComponentCosts plus two
+driven by `costmodel.predict_arm` over calibrated ComponentCosts plus three
 online signals the engine maintains itself:
 
   * an EWMA of measured per-batch latency per (op, arm), fed back from the
@@ -23,7 +23,13 @@ online signals the engine maintains itself:
     host-side from the route destinations — the same histogram
     `routing.owner_loads` derives from a RoutePlan's occupancy): high skew
     serializes RDMA atomics in one owner's apply lane while AM aggregation
-    amortizes the round trip, so skew tilts the model toward the AM arms.
+    amortizes the round trip, so skew tilts the model toward the AM arms;
+  * a batch *dedup ratio* (unique key rows / total rows, `batch_dedup` —
+    the statistic `routing.Coalescing.dedup_ratio()` measures on the
+    wire): duplicate traffic (dedup < 1) turns sender-side coalescing on
+    for the fused/AM arms and prices them with the distinct-row factor
+    (DESIGN.md §6) — hot-key batches collapse toward O(distinct) wire
+    rows, tilting the model back toward the coalesced one-sided arms.
 
 Every choice is recorded as a `Decision`; the RDMA arms run inside
 `window.decision_scope` and the AM arms thread the record into
@@ -61,6 +67,10 @@ class Decision:
     scores: Dict[str, float]      # per-arm score (µs/op) the choice used
     source: str                   # "model" | "ewma" | "mixed" | "forced" | ...
     batch_ops: int                # valid ops in the batch (0 if traced)
+    dedup: float = 1.0            # distinct-row fraction (1.0 if unknown);
+                                  # < 1 turns sender-side coalescing on for
+                                  # the fused/AM arms (DESIGN.md §6)
+    coalesce: bool = False        # the executed arm ran with coalescing
 
 
 def _concrete(x) -> Optional[np.ndarray]:
@@ -71,6 +81,23 @@ def _concrete(x) -> Optional[np.ndarray]:
         return np.asarray(x)
     except Exception:  # TracerArrayConversionError and friends
         return None
+
+
+def batch_dedup(keys, valid=None) -> float:
+    """Distinct-row fraction of a batch: unique key rows / total rows —
+    the third online signal (DESIGN.md §6), computed host-side like
+    `batch_skew`. Mirrors `routing.Coalescing.dedup_ratio()` for batches
+    whose duplicate identity is the key (the hash-table front-ends: equal
+    keys place identically, so they share (owner, offset) every probe).
+    Returns 1.0 (no duplicates assumed) when `keys` is a tracer."""
+    k = _concrete(keys)
+    if k is None:
+        return 1.0
+    v = _concrete(valid)
+    flat = k.ravel() if v is None else k[v.astype(bool)].ravel()
+    if flat.size == 0:
+        return 1.0
+    return float(np.unique(flat).size / flat.size)
 
 
 def batch_skew(dst, nranks: int, valid=None) -> float:
@@ -190,6 +217,7 @@ class AdaptiveEngine:
         if dst is not None and skew == 1.0:
             skew = batch_skew(dst, self.nranks, valid)
         s = replace(s, skew=skew)
+        dedup = s.dedup
         if nops is None:
             v = _concrete(valid)
             d = _concrete(dst)
@@ -226,7 +254,9 @@ class AdaptiveEngine:
                     # instead of locking onto the runner-up forever
                     self._seen[(op, runner)] = tick
         dec = Decision(op=op, promise=promise, arm=arm, skew=skew,
-                       scores=scores, source=source, batch_ops=nops)
+                       scores=scores, source=source, batch_ops=nops,
+                       dedup=dedup,
+                       coalesce=cm.arm_coalesces(op, arm, dedup))
         self.log.append(dec)
         self.last_decision = dec
         return dec
@@ -266,30 +296,44 @@ class AdaptiveEngine:
         return eng
 
     # -- data-structure wrappers -------------------------------------------
+    def _ht_stats(self, keys, valid, stats: Optional[OpStats]) -> OpStats:
+        """Hash-table batch stats: fold the observed dedup ratio (unique
+        keys / total — the third online signal, DESIGN.md §6) into the
+        workload stats; pre-set `stats.dedup` to skip the host read."""
+        s = stats or OpStats()
+        if s.dedup == 1.0:
+            s = replace(s, dedup=batch_dedup(keys, valid))
+        return s
+
     def ht_insert(self, ht, keys, vals, promise: Promise = Promise.CRW,
                   valid=None, max_probes: int = 8,
                   stats: Optional[OpStats] = None):
         """Adaptive hash-table insert: returns (table', ok, probes).
 
         The skew statistic reads the batch's owner placement on the host
-        (one device read per batch); pre-set `stats.skew` to skip it."""
+        (one device read per batch); pre-set `stats.skew` to skip it.
+        Duplicate-key batches (dedup < 1) run the fused/AM arms with
+        sender-side coalescing on."""
         from . import hashtable as ht_mod
         from . import window as win_mod
         dst, _ = ht_mod._place(ht, keys)
-        dec = self.decide(DSOp.HT_INSERT, promise, dst, valid, stats)
+        dec = self.decide(DSOp.HT_INSERT, promise, dst, valid,
+                          self._ht_stats(keys, valid, stats))
         if dec.arm in ("am", "am_pt"):
             eng = self._need_am(
                 "ht_insert",
                 lambda e: ht_mod.build_am_handlers(ht, e,
                                                    max_probes=max_probes))
             return self._timed(dec, lambda: ht_mod.insert_rpc(
-                ht, eng, keys, vals, valid=valid, decision=dec))
+                ht, eng, keys, vals, valid=valid, decision=dec,
+                coalesce=dec.coalesce))
 
         def run():
             with win_mod.decision_scope(dec):
                 return ht_mod.insert_rdma(
                     ht, keys, vals, promise=promise, valid=valid,
-                    max_probes=max_probes, fused=dec.arm == "rdma_fused")
+                    max_probes=max_probes, fused=dec.arm == "rdma_fused",
+                    coalesce=dec.coalesce)
         return self._timed(dec, run)
 
     def ht_find(self, ht, keys, promise: Promise = Promise.CR,
@@ -299,21 +343,24 @@ class AdaptiveEngine:
         from . import hashtable as ht_mod
         from . import window as win_mod
         dst, _ = ht_mod._place(ht, keys)
-        dec = self.decide(DSOp.HT_FIND, promise, dst, valid, stats)
+        dec = self.decide(DSOp.HT_FIND, promise, dst, valid,
+                          self._ht_stats(keys, valid, stats))
         if dec.arm in ("am", "am_pt"):
             eng = self._need_am(
                 "ht_find",
                 lambda e: ht_mod.build_am_handlers(ht, e,
                                                    max_probes=max_probes))
             found, vals = self._timed(dec, lambda: ht_mod.find_rpc(
-                ht, eng, keys, valid=valid, decision=dec))
+                ht, eng, keys, valid=valid, decision=dec,
+                coalesce=dec.coalesce))
             return ht, found, vals
 
         def run():
             with win_mod.decision_scope(dec):
                 return ht_mod.find_rdma(
                     ht, keys, promise=promise, valid=valid,
-                    max_probes=max_probes, fused=dec.arm == "rdma_fused")
+                    max_probes=max_probes, fused=dec.arm == "rdma_fused",
+                    coalesce=dec.coalesce)
         return self._timed(dec, run)
 
     def q_push(self, q, vals, promise: Promise = Promise.CRW, valid=None,
@@ -338,7 +385,8 @@ class AdaptiveEngine:
                 return q_mod.push_rdma(
                     q, vals, promise=promise, valid=valid,
                     max_cas_rounds=max_cas_rounds,
-                    planned=dec.arm == "rdma_fused")
+                    planned=dec.arm == "rdma_fused",
+                    coalesce=dec.coalesce)
         return self._timed(dec, run)
 
     def q_pop(self, q, n: int, promise: Promise = Promise.CR, valid=None,
@@ -360,7 +408,8 @@ class AdaptiveEngine:
                 return q_mod.pop_rdma(
                     q, n, promise=promise, valid=valid,
                     max_cas_rounds=max_cas_rounds,
-                    planned=dec.arm == "rdma_fused")
+                    planned=dec.arm == "rdma_fused",
+                    coalesce=dec.coalesce)
         return self._timed(dec, run)
 
 

@@ -47,17 +47,28 @@ class Handler:
                                   Tuple[Any, Array]]] = None
 
 
+# Explicit bound on the dispatch diagnostic ring (see AMEngine.dispatch_log).
+DISPATCH_LOG_MAX = 1024
+
+
 class AMEngine:
     """Handler registry + dispatch. One engine per distributed structure."""
 
-    def __init__(self, nranks: int):
+    def __init__(self, nranks: int, dispatch_log_max: int = DISPATCH_LOG_MAX):
         self.nranks = nranks
         self._handlers: dict[str, Handler] = {}
-        # (handler name, Decision) per dispatch issued by the adaptive
+        # (handler name, Decision, info) per dispatch issued by the adaptive
         # layer — benchmarks read this to log which arm serviced a batch.
-        # Bounded ring: library callers never drain it.
+        # Bounded ring: library callers never drain it; `drain_dispatch_log`
+        # returns-and-clears for callers that do.
         self.dispatch_log: collections.deque = collections.deque(
-            maxlen=1024)
+            maxlen=dispatch_log_max)
+
+    def drain_dispatch_log(self):
+        """Return and clear the (handler, decision, info) dispatch log."""
+        out = list(self.dispatch_log)
+        self.dispatch_log.clear()
+        return out
 
     def register(self, name: str, fn: HandlerFn, reply_width: int,
                  batched_fn=None) -> Handler:
@@ -75,7 +86,8 @@ class AMEngine:
                  payload: Array, valid: Optional[Array] = None,
                  cap: Optional[int] = None,
                  plan: Optional[routing.RoutePlan] = None,
-                 decision: Optional[Any] = None
+                 decision: Optional[Any] = None,
+                 coalesce: bool = False
                  ) -> Tuple[Any, Array, Array]:
         """Issue one aggregated AM phase for a batch of requests.
 
@@ -87,6 +99,13 @@ class AMEngine:
                  plan per batch and skip the per-dispatch routing sort
         decision: optional adaptive.Decision that chose this dispatch —
                  recorded in `self.dispatch_log` for benchmark attribution
+        coalesce: dedup IDENTICAL request rows to the same destination
+                 sender-side — the handler sees one combined row per
+                 duplicate run and its reply fans out to every duplicate
+                 requester (DESIGN.md §6). Only valid for handlers that are
+                 idempotent across identical requests (the hash-table
+                 insert-or-assign and find handlers are; a queue push is
+                 NOT — each identical push must land separately).
         returns (state', replies (P, n, RW), delivered (P, n)).
 
         Exactly two network phases regardless of handler complexity; for
@@ -94,27 +113,48 @@ class AMEngine:
         is derivable locally from `delivered`, matching the paper's
         counter-increment reply elision).
         """
+        co = None
+        eff_valid = valid
+        if coalesce:
+            co = routing.coalesce(dst, payload[..., 0], match=payload,
+                                  valid=valid)
+            eff_valid = co.rep if valid is None else (valid & co.rep)
         if decision is not None:
-            self.dispatch_log.append((handler.name, decision))
+            info = None
+            if co is not None:
+                from . import window as win_mod
+                info = win_mod._coalesce_info(co)
+            self.dispatch_log.append((handler.name, decision, info))
         if plan is not None:
             cap = plan.cap
-            routed = routing.route_with_plan(plan, payload, active=valid,
+            routed = routing.route_with_plan(plan, payload,
+                                             active=eff_valid,
                                              role="am_req")
         else:
             cap = dst.shape[1] if cap is None else cap
-            routed = routing.route(dst, payload, cap, valid, role="am_req")
+            routed = routing.route(dst, payload, cap, eff_valid,
+                                   role="am_req")
         flat, mask = routing.flatten_owner_view(routed)
 
         if handler.batched_fn is not None:
             state2, reply_flat = handler.batched_fn(state, flat, mask)
         else:
             state2, reply_flat = jax.vmap(handler.fn)(state, flat, mask)
+        delivered = routed.op_ok
+        if co is not None:
+            # reply fan-out: duplicates are delivered iff their
+            # representative was
+            delivered = routing.lead(co, delivered)
+            if valid is not None:
+                delivered = delivered & valid
         if handler.reply_width == 0:
             replies = jnp.zeros(dst.shape + (0,), dtype=jnp.int32)
-            return state2, replies, routed.op_ok
+            return state2, replies, delivered
         replies_o = routing.unflatten_owner_view(reply_flat, self.nranks, cap)
         replies = routing.route_replies(routed, replies_o, dst, role="am_rep")
-        return state2, replies, routed.op_ok
+        if co is not None:
+            replies = routing.lead(co, replies)
+        return state2, replies, delivered
 
     def dispatch_local(self, handler: Handler, state: Any, payload: Array,
                        valid: Optional[Array] = None

@@ -37,6 +37,10 @@ class ComponentCosts:
     local: float = 0.05         # ell: local push/pop
     amo_apply: float = 0.0      # owner-lane serialized-apply term (TPU only)
     pt_overhead: float = 1.35   # progress-thread contention factor (Fig. 6 PT)
+    combine: float = 0.05       # sender-side coalescing overhead per op
+                                # (duplicate-run lexsort + reply fan-out,
+                                # DESIGN.md §6) — paid whether or not the
+                                # batch actually contains duplicates
     # Fused component phases (None -> derived: the compound descriptor rides
     # the atomic's two exchanges, so a fused op costs its atomic; the saved
     # W / R / A_fao phases are the win). calibrate() overrides with measured
@@ -107,18 +111,32 @@ def _rpc_cost(c: ComponentCosts, stats: OpStats) -> float:
 def predict(op: DSOp, promise: Promise, backend: Backend,
             stats: Optional[OpStats] = None,
             params: ComponentCosts = CORI_PHASE1,
-            fused: bool = False) -> float:
+            fused: bool = False, coalesce: bool = False) -> float:
     """Best-case per-op latency (µs) — the paper's Tables II/III formulas.
 
     fused=True prices the fused-descriptor engine (DESIGN.md §2): the
     hash-table insert collapses to probes fused claim/write(/publish)
-    phases and the C_RW find's lock+get fuse into one A_FAO_GET pair."""
+    phases and the C_RW find's lock+get fuse into one A_FAO_GET pair.
+
+    coalesce=True prices sender-side combining (DESIGN.md §6) via the
+    distinct-row factor rho = stats.dedup: only rho of the batch's rows
+    cross the wire and land in the owner apply lanes, so (a) the per-op
+    component terms amortize over 1/rho duplicate riders and (b) the hot
+    owner's serialized lane sees skew*rho of the mean load instead of
+    skew. Every op additionally pays the sender-side `combine` overhead.
+    rho = 1 (all-distinct traffic) degrades to the uncoalesced formula
+    plus the combine overhead — which is why the chooser only coalesces
+    when the observed dedup ratio is < 1."""
     s = stats or OpStats()
     c = params
     if backend == Backend.AUTO:
         raise ValueError("predict() needs a concrete backend; "
                          "use choose_backend() first")
     if backend == Backend.RPC:
+        if coalesce:
+            rho = min(1.0, max(float(s.dedup), 1e-3))
+            base = _rpc_cost(c, replace(s, skew=max(1.0, s.skew * rho)))
+            return rho * base + (1.0 - rho) * c.handler + c.combine
         return _rpc_cost(c, s)
 
     probes = max(1.0, s.expected_probes)
@@ -126,6 +144,13 @@ def predict(op: DSOp, promise: Promise, backend: Backend,
     # batch with skew k makes the hot owner apply k× the mean load, so the
     # per-op owner-lane term scales with the skew (the Fig. 3
     # FAD-single-variable pathology, generalized to partial skew).
+    if coalesce:
+        # distinct-row factor: the hot lane only applies the distinct rows
+        rho = min(1.0, max(float(s.dedup), 1e-3))
+        base = predict(op, promise, backend,
+                       replace(s, skew=max(1.0, s.skew * rho), dedup=1.0),
+                       params, fused=fused, coalesce=False)
+        return rho * base + c.combine
     amo = c.amo_apply * max(1.0, s.skew)
     if op == DSOp.HT_INSERT:
         if promise == Promise.CRW:      # (a) fully atomic: CAS + W + FAO
@@ -250,6 +275,26 @@ def choose_backend(op: DSOp, promise: Promise,
     return Backend.RDMA if rdma <= rpc else Backend.RPC
 
 
+def arm_coalesces(op: DSOp, arm: str, dedup: float) -> bool:
+    """Whether the engine actually runs `arm` with sender-side combining
+    (DESIGN.md §6) for this op at this observed dedup ratio — the single
+    rule shared by the pricer (predict_arm) and the executor
+    (adaptive.decide), so arms are never scored with a discount the
+    execution cannot realize:
+
+    - the seed `rdma` arm never coalesces (it is the uncombined baseline);
+    - queue ops never coalesce on the AM arms (a push handler is NOT
+      idempotent across identical requests — each push must land) and
+      the one-sided queue arms only combine their ticket FAOs;
+    - everything else coalesces exactly when duplicates exist (dedup < 1).
+    """
+    if dedup >= 1.0 or arm == "rdma":
+        return False
+    if op in (DSOp.Q_PUSH, DSOp.Q_POP) and arm in ("am", "am_pt"):
+        return False
+    return True
+
+
 def predict_arm(op: DSOp, promise: Promise, arm: str,
                 stats: Optional[OpStats] = None,
                 params: ComponentCosts = CORI_PHASE1) -> float:
@@ -258,18 +303,28 @@ def predict_arm(op: DSOp, promise: Promise, arm: str,
     `rdma` / `rdma_fused` are the seed and planned+fused one-sided engines;
     `am` / `am_pt` are aggregated active messages without / with a progress
     thread (the paper Fig. 6 "PT" curve). The AUTO chooser in
-    core/adaptive.py calls this for every arm and takes the argmin."""
+    core/adaptive.py calls this for every arm and takes the argmin.
+
+    The observed dedup ratio (stats.dedup, the adaptive layer's third
+    online signal) prices coalescing where the engine actually applies it
+    (`arm_coalesces`): duplicate traffic discounts the fused/AM arms with
+    the distinct-row factor — the seed `rdma` arm never coalesces and
+    keeps the plain formula."""
     s = stats or OpStats()
+    co = arm_coalesces(op, arm, s.dedup)
     if arm == "rdma":
         return predict(op, promise, Backend.RDMA, s, params, fused=False)
     if arm == "rdma_fused":
-        return predict(op, promise, Backend.RDMA, s, params, fused=True)
+        return predict(op, promise, Backend.RDMA, s, params, fused=True,
+                       coalesce=co)
     if arm == "am":
         return predict(op, promise, Backend.RPC,
-                       replace(s, progress_thread=False), params)
+                       replace(s, progress_thread=False), params,
+                       coalesce=co)
     if arm == "am_pt":
         return predict(op, promise, Backend.RPC,
-                       replace(s, progress_thread=True), params)
+                       replace(s, progress_thread=True), params,
+                       coalesce=co)
     raise ValueError(f"unknown arm {arm!r}; expected one of {ARMS}")
 
 

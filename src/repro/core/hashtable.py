@@ -87,7 +87,8 @@ def _place(ht: DHashTable, keys: Array) -> Tuple[Array, Array]:
 def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
                 promise: Promise = Promise.CRW,
                 valid: Optional[Array] = None, max_probes: int = 8,
-                fused: bool = True) -> Tuple[DHashTable, Array, Array]:
+                fused: bool = True, coalesce: bool = False
+                ) -> Tuple[DHashTable, Array, Array]:
     """Batched insert. keys (P, n) int32, vals (P, n, vw) int32.
 
     Returns (table', success (P,n), probe_count (P,n)). Distinct keys per
@@ -98,6 +99,17 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
     the trailing W / A_FAO phases disappear. fused=False keeps the unfused
     per-component phases (probes×A_CAS + W [+ A_FAO]); both paths are
     bit-exact equivalent (tests/test_datastructures.py).
+
+    coalesce=True (DESIGN.md §6): duplicate IDENTICAL [key|val] rows in a
+    batch are combined sender-side. With fused=True the whole batch uses
+    one CoalescedPlan and a duplicate group claims ONE slot: the
+    representative's claim satisfies every duplicate (same record lands in
+    the table), so duplicates short-circuit instead of claiming sibling
+    slots — wire rows and probe phases collapse toward O(distinct keys).
+    Visible results (ok flags, subsequent finds) are conformant with the
+    uncoalesced engine; the slot-level table state differs only in that
+    duplicate side-copies are elided. With fused=False coalescing is
+    phase-local (window-level) and fully bit-exact.
     """
     assert promise in (Promise.CRW, Promise.CW)
     if valid is None:
@@ -107,9 +119,16 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
     claim_to = FLAG_RESERVED if promise == Promise.CRW else FLAG_READY
 
     if fused:
-        plan = routing.make_plan(dst, valid, cap=keys.shape[1],
-                                 role="ht_insert")
         payload = jnp.concatenate([keys[..., None], vals], axis=-1)
+        if coalesce:
+            plan = routing.coalesce_plan(dst, start, match=payload,
+                                         valid=valid, cap=keys.shape[1],
+                                         role="ht_insert")
+            co = plan.co
+        else:
+            plan = routing.make_plan(dst, valid, cap=keys.shape[1],
+                                     role="ht_insert")
+            co = None
         flip = int(FLAG_RESERVED) ^ int(FLAG_READY)
 
         def probe_fused(carry):
@@ -124,6 +143,10 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
                 old, win = rdma_cas_put(
                     win, dst, off, FLAG_EMPTY, claim_to, off + 1, payload,
                     valid=active, plan=plan)
+            if co is not None:
+                # the whole duplicate run adopts its representative's
+                # outcome: one claim serves every identical [key|val] row
+                old = routing.lead(co, old)
             newly = active & (old == FLAG_EMPTY)
             claimed = jnp.where(newly, slot, claimed)
             probes = probes + active.astype(jnp.int32)
@@ -146,7 +169,10 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
         win, active, claimed, probes = carry
         slot = (start + j) % nslots
         off = slot * rec_w
-        old, win = rdma_cas(win, dst, off, FLAG_EMPTY, claim_to, valid=active)
+        # coalesce is phase-local here (fresh runs per probe): identical
+        # CAS rows dedup on the wire, losers reconstruct bit-exactly
+        old, win = rdma_cas(win, dst, off, FLAG_EMPTY, claim_to,
+                            valid=active, coalesce=coalesce)
         newly = active & (old == FLAG_EMPTY)
         claimed = jnp.where(newly, slot, claimed)
         probes = probes + active.astype(jnp.int32)
@@ -177,7 +203,8 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
 def find_rdma(ht: DHashTable, keys: Array,
               promise: Promise = Promise.CR,
               valid: Optional[Array] = None, max_probes: int = 8,
-              fused: bool = True) -> Tuple[DHashTable, Array, Array]:
+              fused: bool = True, coalesce: bool = False
+              ) -> Tuple[DHashTable, Array, Array]:
     """Batched find. Returns (table', found (P,n), vals (P,n,vw)).
 
     C_R : one bare get per probe (flag+key+val in a single R).
@@ -189,14 +216,29 @@ def find_rdma(ht: DHashTable, keys: Array,
     gathered flag word may predate later locks in the batch, but the C_RW
     hit test uses the lock's fetched state, so results are bit-exact with
     fused=False.
+
+    coalesce=True (DESIGN.md §6): duplicate-key rows probe ONCE and the
+    reply fans out — a zipfian find batch ships O(distinct keys) wire
+    rows. Bit-exact: a duplicate group always decides (hit / miss /
+    continue) identically, and for C_RW the combined read-lock carries the
+    summed reader units whose per-op fetched values are reconstructed
+    sender-side.
     """
     assert promise in (Promise.CRW, Promise.CR)
     if valid is None:
         valid = jnp.ones(keys.shape, dtype=bool)
     dst, start = _place(ht, keys)
     rec_w, nslots, vw = ht.rec_w, ht.nslots, ht.val_words
-    plan = (routing.make_plan(dst, valid, cap=keys.shape[1], role="ht_find")
-            if fused else None)
+    if fused and coalesce:
+        plan = routing.coalesce_plan(dst, start, match=keys[..., None],
+                                     valid=valid, cap=keys.shape[1],
+                                     role="ht_find")
+    elif fused:
+        plan = routing.make_plan(dst, valid, cap=keys.shape[1],
+                                 role="ht_find")
+    else:
+        plan = None
+    loc_coalesce = coalesce and not fused  # phase-local runs (no plan)
 
     def probe_body(j, win, active, found, out):
         slot = (start + j) % nslots
@@ -210,15 +252,19 @@ def find_rdma(ht: DHashTable, keys: Array,
                 state = old & STATE_MASK
             else:
                 old, win = rdma_fao(win, dst, off, unit,
-                                    win_mod.AmoKind.FAA, valid=active)
+                                    win_mod.AmoKind.FAA, valid=active,
+                                    coalesce=loc_coalesce)
                 state = old & STATE_MASK
                 lockable = active & (state == FLAG_READY)
-                rec = rdma_get(win, dst, off, rec_w, valid=lockable)
+                rec = rdma_get(win, dst, off, rec_w, valid=lockable,
+                               coalesce=loc_coalesce)
             _, win = rdma_fao(win, dst, off, -unit, win_mod.AmoKind.FAA,
-                              valid=active, plan=plan)
+                              valid=active, plan=plan,
+                              coalesce=loc_coalesce)
             flag_state = state
         else:
-            rec = rdma_get(win, dst, off, rec_w, valid=active, plan=plan)
+            rec = rdma_get(win, dst, off, rec_w, valid=active, plan=plan,
+                           coalesce=loc_coalesce)
             flag_state = rec[..., 0] & STATE_MASK
         hit = active & (flag_state == FLAG_READY) & (rec[..., 1] == keys)
         miss_end = active & (flag_state == FLAG_EMPTY)
@@ -359,17 +405,22 @@ def build_am_handlers(ht: DHashTable, engine: am_mod.AMEngine,
 
 def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
                vals: Array, valid: Optional[Array] = None,
-               decision=None) -> Tuple[DHashTable, Array, Array]:
+               decision=None, coalesce: bool = False
+               ) -> Tuple[DHashTable, Array, Array]:
     """Insert-or-assign via ONE AM round trip (cost: am_rt + handler).
 
     Returns (table', ok, probes): probes is the handler's REAL probe count
-    carried in the reply word, so RDMA/RPC probe stats are comparable."""
+    carried in the reply word, so RDMA/RPC probe stats are comparable.
+    coalesce=True dedups identical [start|key|val] request rows — safe
+    because the handler is insert-or-assign (idempotent for identical
+    rows), and its reply fans out to every duplicate."""
     dst, start = _place(ht, keys)
     payload = jnp.concatenate([start[..., None], keys[..., None], vals],
                               axis=-1)
     h = engine.handler("ht_insert")
     data, replies, delivered = engine.dispatch(h, ht.win.data, dst, payload,
-                                               valid, decision=decision)
+                                               valid, decision=decision,
+                                               coalesce=coalesce)
     ok = delivered & (replies[..., 0] > 0)
     probes = jnp.where(delivered, replies[..., 1], 0)
     return (DHashTable(win=Window(data=data), nslots=ht.nslots,
@@ -377,13 +428,14 @@ def insert_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
 
 
 def find_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
-             valid: Optional[Array] = None, decision=None
-             ) -> Tuple[Array, Array]:
+             valid: Optional[Array] = None, decision=None,
+             coalesce: bool = False) -> Tuple[Array, Array]:
     dst, start = _place(ht, keys)
     payload = jnp.concatenate([start[..., None], keys[..., None]], axis=-1)
     h = engine.handler("ht_find")
     _, replies, delivered = engine.dispatch(h, ht.win.data, dst, payload,
-                                            valid, decision=decision)
+                                            valid, decision=decision,
+                                            coalesce=coalesce)
     found = delivered & (replies[..., 0] > 0)
     return found, replies[..., 1:]
 
@@ -402,7 +454,8 @@ def insert(ht, keys, vals, *, promise=Promise.CRW, backend=Backend.AUTO,
         a = adaptive or ad.default_engine(ht.nranks, am_engine=engine)
         return a.ht_insert(ht, keys, vals, promise=promise, **kw)
     if backend == Backend.RPC:
-        return insert_rpc(ht, engine, keys, vals, valid=kw.get("valid"))
+        return insert_rpc(ht, engine, keys, vals, valid=kw.get("valid"),
+                          coalesce=kw.get("coalesce", False))
     return insert_rdma(ht, keys, vals, promise=promise, **kw)
 
 
@@ -414,6 +467,7 @@ def find(ht, keys, *, promise=Promise.CR, backend=Backend.AUTO, engine=None,
         a = adaptive or ad.default_engine(ht.nranks, am_engine=engine)
         return a.ht_find(ht, keys, promise=promise, **kw)
     if backend == Backend.RPC:
-        found, vals = find_rpc(ht, engine, keys, valid=kw.get("valid"))
+        found, vals = find_rpc(ht, engine, keys, valid=kw.get("valid"),
+                               coalesce=kw.get("coalesce", False))
         return ht, found, vals
     return find_rdma(ht, keys, promise=promise, **kw)

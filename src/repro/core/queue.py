@@ -101,7 +101,8 @@ def _host_dst(q: DQueue, shape) -> Array:
 # ---------------------------------------------------------------------------
 def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
               valid: Optional[Array] = None, max_cas_rounds: int = 8,
-              planned: bool = True) -> Tuple[DQueue, Array]:
+              planned: bool = True, coalesce: bool = False
+              ) -> Tuple[DQueue, Array]:
     """Batched push of vals (P, n, vw) onto the hosted ring buffer.
 
     Returns (queue', pushed (P, n) bool). Ops that would overflow the ring
@@ -113,6 +114,13 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
     FAO, failure-return FAO, payload W, and the max_cas_rounds publish
     CASes — reuses ONE RoutePlan (the host destination never changes), so
     the whole op costs one routing sort instead of `max_cas_rounds + 3`.
+
+    coalesce=True (DESIGN.md §6): the reserve and failure-return FAO
+    phases combine each origin's n ticket increments into ONE wire row per
+    origin (every push targets the same (host, TAIL) word — the extreme
+    duplicate case); per-op tickets are reconstructed sender-side from the
+    base ticket + each op's prefix, bit-exactly. The payload write and the
+    publish CAS rounds target distinct words and are left alone.
     """
     assert promise in (Promise.CRW, Promise.CW)
     if valid is None:
@@ -129,7 +137,7 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
     one = jnp.ones((P, n), dtype=jnp.int32)
     off_tail = jnp.zeros((P, n), dtype=jnp.int32) + TAIL
     ticket, win = rdma_fao(q.win, dst, off_tail, one, AmoKind.FAA,
-                           valid=valid, plan=plan)
+                           valid=valid, plan=plan, coalesce=coalesce)
 
     # Ring-capacity check against head_ready (read is free at the host in
     # BCL's implementation via a cached local bound; we read our own cached
@@ -141,7 +149,7 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
     # last successful ticket + 1). One extra A_FAO on the failure path.
     neg = jnp.where(valid & ~ok, -1, 0)
     _, win = rdma_fao(win, dst, off_tail, neg, AmoKind.FAA,
-                      valid=valid & ~ok, plan=plan)
+                      valid=valid & ~ok, plan=plan, coalesce=coalesce)
 
     # Phase 2 — W: write the payload into the reserved slot.
     slot = ticket % q.capacity
@@ -183,7 +191,8 @@ def push_rdma(q: DQueue, vals: Array, promise: Promise = Promise.CRW,
 # ---------------------------------------------------------------------------
 def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
              valid: Optional[Array] = None, max_cas_rounds: int = 8,
-             planned: bool = True) -> Tuple[DQueue, Array, Array]:
+             planned: bool = True, coalesce: bool = False
+             ) -> Tuple[DQueue, Array, Array]:
     """Batched pop of up to n values per rank. Returns (q', got (P,n), vals).
 
     C_R : A_FAO (reserve head) + R (read slot). A barrier separates pops
@@ -192,6 +201,9 @@ def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
           reservation is validated against tail_ready.
 
     planned=True: one RoutePlan shared by every phase (see push_rdma).
+    coalesce=True combines the head-reservation (and failure-return) FAOs
+    into one wire row per origin, tickets reconstructed sender-side
+    (bit-exact; see push_rdma).
     """
     assert promise in (Promise.CRW, Promise.CR)
     P = q.nranks
@@ -205,7 +217,7 @@ def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
     one = jnp.ones((P, n), dtype=jnp.int32)
     off_head = jnp.zeros((P, n), dtype=jnp.int32) + HEAD
     ticket, win = rdma_fao(q.win, dst, off_head, one, AmoKind.FAA,
-                           valid=valid, plan=plan)
+                           valid=valid, plan=plan, coalesce=coalesce)
 
     # Bound check: may only read below the publish frontier. Checksum
     # queues read optimistically below `tail` and validate the in-payload
@@ -217,7 +229,7 @@ def pop_rdma(q: DQueue, n: int, promise: Promise = Promise.CR,
     # not skipped by later pops.
     neg = jnp.where(valid & ~got, -1, 0)
     _, win = rdma_fao(win, dst, off_head, neg, AmoKind.FAA,
-                      valid=valid & ~got, plan=plan)
+                      valid=valid & ~got, plan=plan, coalesce=coalesce)
 
     slot = ticket % q.capacity
     base = CTRL_WORDS + slot * slot_w

@@ -22,7 +22,7 @@ from __future__ import annotations
 import contextlib
 import functools
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -304,6 +304,212 @@ def route_replies(routed: Routed, replies: jax.Array, dst: jax.Array,
         return back_r[dst_r, slot_r]               # (n, W)
 
     return jax.vmap(gather_one)(back, dst, routed.op_slot)
+
+
+# ---------------------------------------------------------------------------
+# Sender-side coalescing (DESIGN.md §6): dedup duplicate (dst, off)
+# descriptor rows per origin BEFORE the exchange, so the request exchange,
+# the owner apply lanes, and the reply exchange all operate on *distinct*
+# rows. The structure is computed locally (one lexsort, ZERO extra
+# exchanges); replies fan back out to every duplicate requester via `lead`.
+#
+# A *run* is a maximal group of ops from one origin that (a) target the
+# same (dst, off), (b) agree on every `match` column, and (c) are
+# consecutive once the batch is stably sorted by (dst, off). Ops of the
+# same origin at the same (dst, off) occupy consecutive serialization
+# slots at the owner (interleaved only with commuting other-offset ops),
+# so combining a run and shipping one representative row preserves the
+# (src_rank, slot) serialization contract bit-exactly; per-op replies are
+# reconstructed sender-side (operand prefix for FAOs, the chained-CAS
+# formula, the leader's reply for gets/puts).
+# ---------------------------------------------------------------------------
+def _suffix_min(x: jax.Array) -> jax.Array:
+    return jnp.flip(jax.lax.associative_scan(jnp.minimum, jnp.flip(x)))
+
+
+def _prefix_max(x: jax.Array) -> jax.Array:
+    return jax.lax.associative_scan(jnp.maximum, x)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["rep", "leader", "pos", "order", "run_first",
+                                "rows_in", "rows_out"],
+                   meta_fields=[])
+@dataclass
+class Coalescing:
+    """Duplicate-run structure for one batch (per-origin, sender-side).
+
+    rep:       (P, n) op is its run's representative (first in op order)
+    leader:    (P, n) op index (within n) of each op's representative
+    pos:       (P, n) rank of the op within its run (0 == rep)
+    order:     (P, n) the (dst, off)-stable sort permutation runs live in
+    run_first: (P, n) run boundaries, in sorted space
+    rows_in:   (P,)   valid rows before combining
+    rows_out:  (P,)   representative rows after combining
+    """
+
+    rep: jax.Array
+    leader: jax.Array
+    pos: jax.Array
+    order: jax.Array
+    run_first: jax.Array
+    rows_in: jax.Array
+    rows_out: jax.Array
+
+    def dedup_ratio(self) -> jax.Array:
+        """Distinct-row fraction rows_out / rows_in over all origins."""
+        tot = jnp.maximum(self.rows_in.sum(), 1)
+        return self.rows_out.sum().astype(jnp.float32) / tot
+
+
+def coalesce(dst: jax.Array, off: jax.Array,
+             match: Optional[jax.Array] = None,
+             valid: Optional[jax.Array] = None) -> Coalescing:
+    """Find duplicate runs in a batch of (dst, off[, match]) descriptors.
+
+    dst, off: (P, n) int32; match: optional (P, n, K) extra descriptor
+    words that must ALL agree for two rows to share a run (CAS cmp/new,
+    fused-descriptor payload words, ...). Invalid ops never join a run.
+    Pure local compute — no exchange, one lexsort per origin.
+    """
+    nranks, n = dst.shape
+    if valid is None:
+        valid = jnp.ones(dst.shape, dtype=bool)
+
+    def one(dst_r, off_r, match_r, valid_r):
+        seq = jnp.arange(n, dtype=jnp.int32)
+        dst_eff = jnp.where(valid_r, dst_r, nranks)
+        off_eff = jnp.where(valid_r, off_r, -1)
+        order = jnp.lexsort((seq, off_eff, dst_eff)).astype(jnp.int32)
+        d_s, o_s, v_s = dst_eff[order], off_eff[order], valid_r[order]
+        same = ((d_s[1:] == d_s[:-1]) & (o_s[1:] == o_s[:-1])
+                & v_s[1:] & v_s[:-1])
+        if match_r is not None:
+            m_s = match_r[order]
+            same = same & jnp.all(m_s[1:] == m_s[:-1], axis=-1)
+        run_first = jnp.concatenate([jnp.array([True]), ~same])
+        idx = jnp.arange(n, dtype=jnp.int32)
+        run_start = _prefix_max(jnp.where(run_first, idx, -1))
+        pos_s = idx - run_start
+        leader_s = order[run_start]
+        rep_s = run_first & v_s
+        leader = jnp.zeros((n,), jnp.int32).at[order].set(leader_s)
+        pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_s)
+        rep = jnp.zeros((n,), bool).at[order].set(rep_s)
+        return rep, leader, pos, order, run_first
+
+    if match is None:
+        rep, leader, pos, order, run_first = jax.vmap(
+            lambda d, o, v: one(d, o, None, v))(dst, off, valid)
+    else:
+        rep, leader, pos, order, run_first = jax.vmap(one)(
+            dst, off, match, valid)
+    return Coalescing(rep=rep, leader=leader, pos=pos, order=order,
+                      run_first=run_first,
+                      rows_in=valid.sum(axis=1).astype(jnp.int32),
+                      rows_out=rep.sum(axis=1).astype(jnp.int32))
+
+
+def lead(co: Coalescing, x: jax.Array) -> jax.Array:
+    """Reply fan-out: every op reads its run representative's row of `x`.
+
+    x: (P, n, ...) per-op values (meaningful at representative rows).
+    Representatives read their own row; duplicates read their leader's.
+    """
+    return jax.vmap(lambda xr, lr: xr[lr])(x, co.leader)
+
+
+def coalesce_fold(co: Coalescing, operand: jax.Array, binop,
+                  identity) -> Tuple[jax.Array, jax.Array]:
+    """Associative-fold duplicate runs of `operand` (P, n).
+
+    Returns (combined, prefix): `combined` carries each run's total fold at
+    its representative row (other rows unchanged — they are never shipped);
+    `prefix[i]` is the exclusive fold of the op's EARLIER run members
+    (identity at representatives), so per-op old values reconstruct as
+    binop(owner_old_at_rep, prefix) — exactly the value each duplicate
+    would have fetched had it been shipped separately.
+    """
+    n = operand.shape[1]
+
+    def one(order, run_first, op_r):
+        op_s = op_r[order]
+
+        def comb(a, b):
+            af, av = a
+            bf, bv = b
+            return af | bf, jnp.where(bf, bv, binop(av, bv))
+
+        _, incl = jax.lax.associative_scan(comb, (run_first, op_s))
+        ident = jnp.full_like(op_s, identity)
+        excl = jnp.where(run_first, ident, jnp.roll(incl, 1))
+        idx = jnp.arange(n, dtype=jnp.int32)
+        run_last = jnp.concatenate([run_first[1:], jnp.array([True])])
+        end = _suffix_min(jnp.where(run_last, idx, n - 1))
+        combined_s = jnp.where(run_first, incl[end], op_s)
+        combined = jnp.zeros_like(op_r).at[order].set(combined_s)
+        prefix = jnp.zeros_like(op_r).at[order].set(excl)
+        return combined, prefix
+
+    return jax.vmap(one)(co.order, co.run_first, operand)
+
+
+def coalesce_last(co: Coalescing, vals: jax.Array) -> jax.Array:
+    """Last-writer-wins combine for put payloads: each representative row
+    is replaced by the LAST value of its run (what the serialized owner
+    apply would have left); other rows are unchanged (never shipped)."""
+    n = vals.shape[1]
+
+    def one(order, run_first, vals_r):
+        idx = jnp.arange(n, dtype=jnp.int32)
+        run_last = jnp.concatenate([run_first[1:], jnp.array([True])])
+        end = _suffix_min(jnp.where(run_last, idx, n - 1))
+        vals_s = vals_r[order]
+        out_s = jnp.where(run_first[:, None], vals_s[end], vals_s)
+        return jnp.zeros_like(vals_r).at[order].set(out_s)
+
+    return jax.vmap(one)(co.order, co.run_first, vals)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["plan", "co"], meta_fields=[])
+@dataclass
+class CoalescedPlan:
+    """A RoutePlan whose occupancy covers only duplicate-run
+    representatives, plus the Coalescing structure that maps every op to
+    its representative. Built ONCE per batch (one plan argsort + one
+    coalescing lexsort, still ONE occupancy exchange — coalescing adds
+    zero exchanges); probe loops pass their shrinking active mask per
+    phase exactly as with a plain plan.
+
+    Contract for reuse across phases: the caller's per-phase active mask
+    must be RUN-UNIFORM (a run deactivates as a whole — e.g. the
+    hash-table loops, where duplicates adopt their representative's
+    outcome). Phase-local coalescing (`coalesce=True` on a window op
+    without a CoalescedPlan) recomputes the runs per call and has no such
+    requirement.
+    """
+
+    plan: RoutePlan
+    co: Coalescing
+
+    @property
+    def cap(self) -> int:
+        return self.plan.cap
+
+
+def coalesce_plan(dst: jax.Array, off: jax.Array,
+                  match: Optional[jax.Array] = None,
+                  valid: Optional[jax.Array] = None,
+                  cap: Optional[int] = None,
+                  role: str = "plan") -> CoalescedPlan:
+    """Coalescing + route plan for a batch: runs found on one local
+    lexsort, plan occupancy exchanged ONCE for the representative rows
+    only — the wire and the owner lanes see distinct rows from the first
+    phase on."""
+    co = coalesce(dst, off, match=match, valid=valid)
+    plan = make_plan(dst, valid=co.rep, cap=cap, role=role)
+    return CoalescedPlan(plan=plan, co=co)
 
 
 def flatten_owner_view(routed: Routed):

@@ -95,3 +95,10 @@ class OpStats:
                                      # High skew serializes RDMA atomics in one
                                      # owner's apply lane while AM aggregation
                                      # amortizes the round trip (DESIGN.md §4).
+    dedup: float = 1.0               # distinct-row fraction of the batch:
+                                     # distinct (owner, offset) descriptor rows
+                                     # / total rows (1.0 = all distinct; 1/n =
+                                     # one hot row). Coalescing (DESIGN.md §6)
+                                     # ships only the distinct rows, so dedup
+                                     # scales the wire/owner-apply terms of the
+                                     # coalesced arms.

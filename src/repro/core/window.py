@@ -40,8 +40,10 @@ Array = jax.Array
 # drain it; unbounded growth would leak).
 # ---------------------------------------------------------------------------
 _CURRENT_DECISION = None
-_PHASE_LOG_MAX = 4096
-_PHASE_LOG: List[Tuple[str, object]] = []
+# Explicit bound on the diagnostic ring: phases beyond this are dropped
+# oldest-first (library callers on the default AUTO path never drain it).
+PHASE_LOG_MAX = 4096
+_PHASE_LOG: List[Tuple[str, object, Optional[dict]]] = []
 
 
 @contextlib.contextmanager
@@ -55,11 +57,29 @@ def decision_scope(decision):
         _CURRENT_DECISION = prev
 
 
-def drain_phase_log() -> List[Tuple[str, object]]:
-    """Return and clear the (role, decision) log of tagged phases."""
+def drain_phase_log() -> List[Tuple[str, object, Optional[dict]]]:
+    """Return and clear the (role, decision, info) log of tagged phases.
+
+    `info` is None for uncoalesced phases; coalesced phases record the
+    sender-side combining stats {"coalesced": True, "rows_in", "rows_out",
+    "dedup_ratio"} when the batch is concrete (host-side ints; absent
+    under jit tracing, where only {"coalesced": True} is recorded)."""
     out = list(_PHASE_LOG)
     _PHASE_LOG.clear()
     return out
+
+
+def _coalesce_info(co: Optional[routing.Coalescing]) -> Optional[dict]:
+    if co is None:
+        return None
+    try:
+        import numpy as np
+        ri = int(np.asarray(co.rows_in).sum())
+        ro = int(np.asarray(co.rows_out).sum())
+    except Exception:  # tracers: stats stay on-device
+        return {"coalesced": True}
+    return {"coalesced": True, "rows_in": ri, "rows_out": ro,
+            "dedup_ratio": ro / max(ri, 1)}
 
 
 @functools.partial(jax.tree_util.register_dataclass, data_fields=["data"],
@@ -215,11 +235,12 @@ def _default_cap(dst: Array, cap: Optional[int]) -> int:
 def _route_phase(dst: Array, payload: Array, cap: int,
                  valid: Optional[Array],
                  plan: Optional[routing.RoutePlan],
-                 role: str) -> routing.Routed:
+                 role: str,
+                 co: Optional[routing.Coalescing] = None) -> routing.Routed:
     if _CURRENT_DECISION is not None:
-        _PHASE_LOG.append((role, _CURRENT_DECISION))
-        if len(_PHASE_LOG) > _PHASE_LOG_MAX:
-            del _PHASE_LOG[:-_PHASE_LOG_MAX]
+        _PHASE_LOG.append((role, _CURRENT_DECISION, _coalesce_info(co)))
+        if len(_PHASE_LOG) > PHASE_LOG_MAX:
+            del _PHASE_LOG[:-PHASE_LOG_MAX]
     if plan is None:
         return routing.route(dst, payload, cap, valid, role=role)
     # valid=None -> active=None: reuse the plan occupancy as-is instead of
@@ -227,19 +248,48 @@ def _route_phase(dst: Array, payload: Array, cap: int,
     return routing.route_with_plan(plan, payload, active=valid, role=role)
 
 
+def _coalesce_for(plan, coalesce: bool, dst: Array, off: Array,
+                  match: Optional[Array], valid: Optional[Array]):
+    """Resolve the coalescing structure for one phase (DESIGN.md §6).
+
+    plan may be a RoutePlan, a CoalescedPlan (its precomputed runs are
+    reused — caller guarantees the active mask is run-uniform), or None.
+    coalesce=True without a CoalescedPlan computes fresh runs for THIS
+    phase (one local lexsort, zero exchanges) — exact under any mask.
+    Returns (base_plan, co, eff_valid) where eff_valid restricts the
+    phase to representative rows."""
+    if isinstance(plan, routing.CoalescedPlan):
+        co, plan = plan.co, plan.plan
+    elif coalesce:
+        co = routing.coalesce(dst, off, match=match, valid=valid)
+    else:
+        return plan, None, valid
+    eff = co.rep if valid is None else (valid & co.rep)
+    return plan, co, eff
+
+
 def rdma_put(win: Window, dst: Array, off: Array, vals: Array,
              valid: Optional[Array] = None, cap: Optional[int] = None,
-             plan: Optional[routing.RoutePlan] = None) -> Window:
+             plan: Optional[routing.RoutePlan] = None,
+             coalesce: bool = False) -> Window:
     """One-sided put: vals (P, n, V) written at word offsets off on rank dst.
 
     ONE network phase. Completion semantics: remote-complete at phase end
     (the paper's put is likewise only guaranteed complete at the next flush).
+    coalesce=True dedups duplicate (dst, off) rows sender-side
+    (last-writer-wins — bit-exact, DESIGN.md §6).
     """
+    plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off, None,
+                                        valid)
     cap = plan.cap if plan is not None else _default_cap(dst, cap)
     V = vals.shape[-1]
-    payload = jnp.concatenate([off[..., None].astype(jnp.int32),
-                               vals.astype(jnp.int32)], axis=-1)
-    routed = _route_phase(dst, payload, cap, valid, plan, role="put")
+    vals = vals.astype(jnp.int32)
+    if co is not None:
+        vals = routing.coalesce_last(co, vals)
+    payload = jnp.concatenate([off[..., None].astype(jnp.int32), vals],
+                              axis=-1)
+    routed = _route_phase(dst, payload, cap, eff_valid, plan, role="put",
+                          co=co)
     flat, mask = routing.flatten_owner_view(routed)
     offs, vwords = flat[..., 0], flat[..., 1:1 + V]
     new_data = jax.vmap(apply_put_local)(win.data, offs, vwords, mask)
@@ -248,11 +298,18 @@ def rdma_put(win: Window, dst: Array, off: Array, vals: Array,
 
 def rdma_get(win: Window, dst: Array, off: Array, width: int,
              valid: Optional[Array] = None, cap: Optional[int] = None,
-             plan: Optional[routing.RoutePlan] = None) -> Array:
-    """One-sided get of `width` words: TWO exchanges (request, data back)."""
+             plan: Optional[routing.RoutePlan] = None,
+             coalesce: bool = False) -> Array:
+    """One-sided get of `width` words: TWO exchanges (request, data back).
+
+    coalesce=True probes each duplicate (dst, off) ONCE and fans the reply
+    out to every duplicate requester (bit-exact, DESIGN.md §6)."""
+    plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off, None,
+                                        valid)
     cap = plan.cap if plan is not None else _default_cap(dst, cap)
     payload = off[..., None].astype(jnp.int32)
-    routed = _route_phase(dst, payload, cap, valid, plan, role="get")
+    routed = _route_phase(dst, payload, cap, eff_valid, plan, role="get",
+                          co=co)
     flat, mask = routing.flatten_owner_view(routed)
 
     def owner_gather(local, offs, m):
@@ -262,6 +319,8 @@ def rdma_get(win: Window, dst: Array, off: Array, width: int,
     vals = jax.vmap(owner_gather)(win.data, flat[..., 0], mask)
     replies = routing.unflatten_owner_view(vals, win.nranks, cap)
     out = routing.route_replies(routed, replies, dst, role="get_rep")
+    if co is not None:
+        out = routing.lead(co, out)
     return out
 
 
@@ -289,13 +348,27 @@ def _kernel_amo(data: Array, flat: Array, mask: Array, kind: int,
 def rdma_fao(win: Window, dst: Array, off: Array, operand: Array,
              kind: AmoKind, valid: Optional[Array] = None,
              cap: Optional[int] = None,
-             plan: Optional[routing.RoutePlan] = None
-             ) -> Tuple[Array, Window]:
-    """Fetch-and-op (FAA/FOR/FAND/FXOR): TWO exchanges, serialized apply."""
-    cap = plan.cap if plan is not None else _default_cap(dst, cap)
+             plan: Optional[routing.RoutePlan] = None,
+             coalesce: bool = False) -> Tuple[Array, Window]:
+    """Fetch-and-op (FAA/FOR/FAND/FXOR): TWO exchanges, serialized apply.
+
+    coalesce=True combines duplicate (dst, off) runs sender-side
+    (operand fold) and reconstructs each duplicate's fetched value from
+    the representative's reply plus its exclusive operand prefix —
+    bit-exact with the uncoalesced serialized apply (DESIGN.md §6)."""
     operand = jnp.broadcast_to(jnp.asarray(operand, jnp.int32), off.shape)
-    payload = jnp.stack([off.astype(jnp.int32), operand], axis=-1)
-    routed = _route_phase(dst, payload, cap, valid, plan, role="fao")
+    plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off, None,
+                                        valid)
+    cap = plan.cap if plan is not None else _default_cap(dst, cap)
+    binop, identity = _FAO_BINOPS[int(kind)]
+    if co is not None:
+        operand_wire, prefix = routing.coalesce_fold(co, operand, binop,
+                                                     identity)
+    else:
+        operand_wire = operand
+    payload = jnp.stack([off.astype(jnp.int32), operand_wire], axis=-1)
+    routed = _route_phase(dst, payload, cap, eff_valid, plan, role="fao",
+                          co=co)
     flat, mask = routing.flatten_owner_view(routed)
 
     def owner_apply(local, p, m):
@@ -309,19 +382,30 @@ def rdma_fao(win: Window, dst: Array, off: Array, operand: Array,
     replies = routing.unflatten_owner_view(old_flat[..., None], win.nranks,
                                            cap)
     old = routing.route_replies(routed, replies, dst, role="fao_rep")[..., 0]
+    if co is not None:
+        old = binop(routing.lead(co, old), prefix)
     return old, Window(data=new_data)
 
 
 def rdma_cas(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
              valid: Optional[Array] = None, cap: Optional[int] = None,
-             plan: Optional[routing.RoutePlan] = None
-             ) -> Tuple[Array, Window]:
-    """Compare-and-swap: TWO exchanges, serialized chained apply."""
-    cap = plan.cap if plan is not None else _default_cap(dst, cap)
+             plan: Optional[routing.RoutePlan] = None,
+             coalesce: bool = False) -> Tuple[Array, Window]:
+    """Compare-and-swap: TWO exchanges, serialized chained apply.
+
+    coalesce=True ships one representative per run of IDENTICAL
+    (dst, off, cmp, new) rows; duplicates short-circuit sender-side with
+    the chained outcome (rep won -> they see `new`; rep lost -> they see
+    the same old) — bit-exact (DESIGN.md §6)."""
     cmp = jnp.broadcast_to(jnp.asarray(cmp, jnp.int32), off.shape)
     new = jnp.broadcast_to(jnp.asarray(new, jnp.int32), off.shape)
+    match = jnp.stack([cmp, new], axis=-1)
+    plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off, match,
+                                        valid)
+    cap = plan.cap if plan is not None else _default_cap(dst, cap)
     payload = jnp.stack([off.astype(jnp.int32), cmp, new], axis=-1)
-    routed = _route_phase(dst, payload, cap, valid, plan, role="cas")
+    routed = _route_phase(dst, payload, cap, eff_valid, plan, role="cas",
+                          co=co)
     flat, mask = routing.flatten_owner_view(routed)
 
     def owner_apply(local, p, m):
@@ -335,6 +419,10 @@ def rdma_cas(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
     replies = routing.unflatten_owner_view(old_flat[..., None], win.nranks,
                                            cap)
     old = routing.route_replies(routed, replies, dst, role="cas_rep")[..., 0]
+    if co is not None:
+        old_l = routing.lead(co, old)
+        old = jnp.where(co.pos == 0, old_l,
+                        jnp.where(old_l == cmp, new, old_l))
     return old, Window(data=new_data)
 
 
@@ -450,14 +538,19 @@ def apply_fao_get_local(local: Array, off: Array, operand: Array, kind: int,
 def _fused_phase(win: Window, dst: Array, desc: Array, reply_width: int,
                  valid: Optional[Array], cap: Optional[int],
                  plan: Optional[routing.RoutePlan], role: str,
-                 xla_apply) -> Tuple[Array, Window]:
+                 xla_apply,
+                 co: Optional[routing.Coalescing] = None
+                 ) -> Tuple[Array, Window]:
     """Route one fused-descriptor phase and apply it at the owners.
 
     xla_apply(data, flat, mask) -> (reply_flat, data') is the vectorized
     XLA owner lane for this (homogeneous) descriptor batch; the Pallas lane
-    goes through the generic kernels/ops.fused_apply."""
+    goes through the generic kernels/ops.fused_apply. When `co` is given,
+    `valid` must already be restricted to representative rows; the raw
+    reply is fanned out to every duplicate requester (per-op fixups are
+    the caller's job)."""
     cap = plan.cap if plan is not None else _default_cap(dst, cap)
-    routed = _route_phase(dst, desc, cap, valid, plan, role=role)
+    routed = _route_phase(dst, desc, cap, valid, plan, role=role, co=co)
     flat, mask = routing.flatten_owner_view(routed)
     if _use_kernel_lane():
         from ..kernels import ops as kops
@@ -467,6 +560,8 @@ def _fused_phase(win: Window, dst: Array, desc: Array, reply_width: int,
         reply_flat, new_data = xla_apply(win.data, flat, mask)
     replies = routing.unflatten_owner_view(reply_flat, win.nranks, cap)
     out = routing.route_replies(routed, replies, dst, role=role + "_rep")
+    if co is not None:
+        out = routing.lead(co, out)
     return out, Window(data=new_data)
 
 
@@ -499,49 +594,86 @@ def _cas_put_xla_apply(data, flat, mask):
 def rdma_cas_put(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
                  put_off: Array, vals: Array,
                  valid: Optional[Array] = None, cap: Optional[int] = None,
-                 plan: Optional[routing.RoutePlan] = None
-                 ) -> Tuple[Array, Window]:
+                 plan: Optional[routing.RoutePlan] = None,
+                 coalesce: bool = False) -> Tuple[Array, Window]:
     """Fused claim + record write: CAS(cmp->new) at `off`; on success the
     V-word `vals` row lands at `put_off` — ONE request phase + reply (the
     C_W insert's probes×A_CAS + W collapsed into probes×A_CAS_PUT).
-    Returns (old-at-off, win')."""
+    Returns (old-at-off, win').
+
+    coalesce=True dedups runs of IDENTICAL descriptors (first-wins: one
+    claim ships, duplicates short-circuit with the chained outcome)."""
     desc = _desc(off, AmoKind.CAS_PUT, cmp, new, put_off, 0, vals)
-    old, win2 = _fused_phase(win, dst, desc, 1, valid, cap, plan,
-                             role="cas_put", xla_apply=_cas_put_xla_apply)
-    return old[..., 0], win2
+    plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off,
+                                        desc[..., 2:], valid)
+    old, win2 = _fused_phase(win, dst, desc, 1, eff_valid, cap, plan,
+                             role="cas_put", xla_apply=_cas_put_xla_apply,
+                             co=co)
+    old = old[..., 0]
+    if co is not None:
+        old = jnp.where(co.pos == 0, old,
+                        jnp.where(old == desc[..., 2], desc[..., 3], old))
+    return old, win2
 
 
 def rdma_cas_put_publish(win: Window, dst: Array, off: Array, cmp: Array,
                          new: Array, put_off: Array, vals: Array,
                          flip: Array, valid: Optional[Array] = None,
                          cap: Optional[int] = None,
-                         plan: Optional[routing.RoutePlan] = None
-                         ) -> Tuple[Array, Window]:
+                         plan: Optional[routing.RoutePlan] = None,
+                         coalesce: bool = False) -> Tuple[Array, Window]:
     """Fused claim + record write + publish: CAS(cmp->new) at `off`; on
     success write `vals` at `put_off` and flip mem[off] ^= `flip` — the
     C_RW insert's three logical ops (A_CAS + W + A_FAO) in TWO exchanges.
-    Returns (old-at-off, win')."""
+    Returns (old-at-off, win').
+
+    coalesce=True dedups runs of IDENTICAL descriptors: one claim (and one
+    publish flip) ships per run, duplicates short-circuit with the chained
+    outcome sender-side (DESIGN.md §6)."""
     desc = _desc(off, AmoKind.CAS_PUT_PUB, cmp, new, put_off, flip, vals)
-    old, win2 = _fused_phase(win, dst, desc, 1, valid, cap, plan,
+    plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off,
+                                        desc[..., 2:], valid)
+    old, win2 = _fused_phase(win, dst, desc, 1, eff_valid, cap, plan,
                              role="cas_put_pub",
-                             xla_apply=_cas_put_xla_apply)
-    return old[..., 0], win2
+                             xla_apply=_cas_put_xla_apply, co=co)
+    old = old[..., 0]
+    if co is not None:
+        old = jnp.where(co.pos == 0, old,
+                        jnp.where(old == desc[..., 2], desc[..., 3], old))
+    return old, win2
 
 
 def rdma_fao_get(win: Window, dst: Array, off: Array, operand: Array,
                  kind: AmoKind, get_off: Array, width: int,
                  valid: Optional[Array] = None, cap: Optional[int] = None,
-                 plan: Optional[routing.RoutePlan] = None
-                 ) -> Tuple[Array, Array, Window]:
+                 plan: Optional[routing.RoutePlan] = None,
+                 coalesce: bool = False) -> Tuple[Array, Array, Window]:
     """Fused fetch-and-op + gather: apply FAO(`operand`, `kind`) at `off`
     and return `width` words from `get_off` in the SAME request/reply pair —
     the C_RW find's read-lock + record get (A_FAO + R, 4 exchanges) in 2.
     The gather is a phase-end snapshot (it observes every atomic in the
     batch, like the unfused engine's trailing get phase would).
-    Returns (old-at-off, gathered (P, n, width), win')."""
+    Returns (old-at-off, gathered (P, n, width), win').
+
+    coalesce=True combines duplicate (dst, off, get_off) runs: the shipped
+    descriptor carries the folded operand, duplicates reconstruct their
+    fetched value from the representative's reply + their operand prefix
+    and share the (phase-end) gathered record — bit-exact."""
     assert int(kind) in (int(AmoKind.FAA), int(AmoKind.FOR),
                          int(AmoKind.FAND), int(AmoKind.FXOR))
-    desc = _desc(off, AmoKind.FAO_GET, operand, int(kind), get_off, 0, None)
+    operand = jnp.broadcast_to(jnp.asarray(operand, jnp.int32), off.shape)
+    get_off_b = jnp.broadcast_to(jnp.asarray(get_off, jnp.int32), off.shape)
+    match = get_off_b[..., None]
+    plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off, match,
+                                        valid)
+    binop, identity = _FAO_BINOPS[int(kind)]
+    if co is not None:
+        operand_wire, prefix = routing.coalesce_fold(co, operand, binop,
+                                                     identity)
+    else:
+        operand_wire = operand
+    desc = _desc(off, AmoKind.FAO_GET, operand_wire, int(kind), get_off, 0,
+                 None)
 
     def xla_apply(data, flat, mask):
         def one(local, p, m):
@@ -551,6 +683,10 @@ def rdma_fao_get(win: Window, dst: Array, off: Array, operand: Array,
 
         return jax.vmap(one)(data, flat, mask)
 
-    reply, win2 = _fused_phase(win, dst, desc, 1 + width, valid, cap, plan,
-                               role="fao_get", xla_apply=xla_apply)
-    return reply[..., 0], reply[..., 1:], win2
+    reply, win2 = _fused_phase(win, dst, desc, 1 + width, eff_valid, cap,
+                               plan, role="fao_get", xla_apply=xla_apply,
+                               co=co)
+    old = reply[..., 0]
+    if co is not None:
+        old = binop(old, prefix)
+    return old, reply[..., 1:], win2

@@ -38,6 +38,91 @@ OP_PUT, OP_GET, OP_CAS, OP_FAA, OP_FOR, OP_FAND, OP_FXOR = range(7)
 OP_CAS_PUT, OP_CAS_PUT_PUB, OP_FAO_GET = 7, 8, 9
 
 
+# ---------------------------------------------------------------------------
+# Duplicate-run combining (DESIGN.md §6), owner-lane side: merge maximal
+# CONSECUTIVE runs of combinable ops in the serialized list before the
+# sequential lane walks it, and reconstruct per-op old values after. Runs
+# are consecutive by construction so no reordering happens — the combined
+# list applies exactly the state transitions of the original one.
+#
+#   FAA             operands sum;     old_i = old_rep + prefix_sum
+#   FOR/FAND/FXOR   operands fold;    old_i = binop(old_rep, prefix_fold)
+#   GET             one probe;        old_i = old_rep
+#   PUT             last writer wins; old_i = prev member's stored value
+#   CAS             identical (a, b) rows only; losers see the chained
+#                   outcome (rep won -> b, else old_rep)
+# ---------------------------------------------------------------------------
+def _fao_identity(code):
+    return jnp.where(code == OP_FAND, jnp.int32(-1), jnp.int32(0))
+
+
+def _fao_merge(code, x, y):
+    return jnp.select(
+        [code == OP_FAA, code == OP_FOR, code == OP_FAND, code == OP_FXOR],
+        [x + y, x | y, x & y, x ^ y], y)
+
+
+def combine_runs(ops, mask):
+    """Merge duplicate runs of one shard's serialized op list.
+
+    ops (m, 4) int32 [off|code|a|b]; mask (m,) bool. Returns
+    (ops', mask', run_start (m,), prefix (m,)): mask' keeps only run
+    representatives, ops' carries the folded operand (FAO) / last value
+    (PUT) at each representative row, run_start[i] is the list index of
+    op i's representative, prefix[i] the exclusive operand fold of its
+    earlier run members."""
+    m = ops.shape[0]
+    off, code, a, b = ops[:, 0], ops[:, 1], ops[:, 2], ops[:, 3]
+    same = (mask[1:] & mask[:-1] & (off[1:] == off[:-1])
+            & (code[1:] == code[:-1]))
+    is_cas = code == OP_CAS
+    same = same & (~is_cas[1:] | ((a[1:] == a[:-1]) & (b[1:] == b[:-1])))
+    run_first = jnp.concatenate([jnp.array([True]), ~same])
+    idx = jnp.arange(m, dtype=jnp.int32)
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(run_first, idx, -1))
+
+    def comb(x, y):
+        xf, xa, _ = x
+        yf, ya, yc = y
+        return xf | yf, jnp.where(yf, ya, _fao_merge(yc, xa, ya)), yc
+
+    _, incl, _ = jax.lax.associative_scan(comb, (run_first, a, code))
+    excl = jnp.where(run_first, _fao_identity(code), jnp.roll(incl, 1))
+    run_last = jnp.concatenate([run_first[1:], jnp.array([True])])
+    end = jnp.flip(jax.lax.associative_scan(
+        jnp.minimum, jnp.flip(jnp.where(run_last, idx, m - 1))))
+    is_fao = ((code == OP_FAA) | (code == OP_FOR) | (code == OP_FAND)
+              | (code == OP_FXOR))
+    a2 = jnp.where(run_first & is_fao, incl[end], a)
+    b2 = jnp.where(run_first & (code == OP_PUT), b[end], b)
+    ops2 = jnp.stack([off, code, a2, b2], axis=-1)
+    mask2 = mask & run_first
+    return ops2, mask2, run_start, excl
+
+
+def reconstruct_runs(ops, mask, run_start, prefix, old_rep):
+    """Per-op old values from the representatives' fetched values.
+
+    old_rep (m,) is the combined apply's reply (meaningful at
+    representative rows). Returns old (m,) as the uncombined serialized
+    apply would have fetched it."""
+    m = ops.shape[0]
+    code, a, b = ops[:, 1], ops[:, 2], ops[:, 3]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    pos = idx - run_start
+    old_l = old_rep[run_start]
+    prev_b = jnp.roll(b, 1)
+    fao = _fao_merge(code, old_l, prefix)
+    old = jnp.select(
+        [code == OP_GET, code == OP_CAS, code == OP_PUT],
+        [old_l,
+         jnp.where(pos == 0, old_l, jnp.where(old_l == a, b, old_l)),
+         jnp.where(pos == 0, old_l, prev_b)],
+        fao)
+    return jnp.where(mask, old, 0)
+
+
 def _amo_kernel(local_ref, ops_ref, mask_ref, old_ref, out_ref):
     # local_ref: (1, L) VMEM; ops_ref: (1, m, 4); mask_ref: (1, m)
     out_ref[...] = local_ref[...]

@@ -37,7 +37,21 @@ def _pick(flag):
 
 
 def amo_apply(local: Array, ops: Array, mask: Array,
-              use_pallas: bool | None = None) -> Tuple[Array, Array]:
+              use_pallas: bool | None = None,
+              combine_runs: bool = False) -> Tuple[Array, Array]:
+    """combine_runs=True merges consecutive duplicate runs in each owner's
+    serialized op list before the lane walks it (operand folds / last
+    writer / identical-row CAS — kernels/amo_apply.combine_runs) and
+    reconstructs per-op old values after — bit-identical output, shorter
+    effective serial chain at the owner (DESIGN.md §6)."""
+    if combine_runs:
+        ops2, mask2, run_start, prefix = jax.vmap(_amo.combine_runs)(ops,
+                                                                     mask)
+        old_rep, local2 = amo_apply(local, ops2, mask2,
+                                    use_pallas=use_pallas)
+        old = jax.vmap(_amo.reconstruct_runs)(ops, mask, run_start,
+                                              prefix, old_rep)
+        return old, local2
     if _pick(use_pallas):
         return _amo.amo_apply(local, ops, mask)
     return jax.vmap(ref.amo_apply)(local, ops, mask)

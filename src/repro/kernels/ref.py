@@ -46,6 +46,21 @@ def amo_apply(local: Array, ops: Array, mask: Array
     return old, local2
 
 
+def amo_apply_combined(local: Array, ops: Array, mask: Array
+                       ) -> Tuple[Array, Array]:
+    """Duplicate-run-combined oracle (DESIGN.md §6): merge maximal
+    consecutive runs of combinable ops (FAO operand folds, last-writer
+    puts, identical-row CAS, shared gets), apply the shortened list with
+    the plain sequential oracle, then reconstruct every op's fetched value
+    from its representative's reply. Bit-identical to `amo_apply` on the
+    full list — the equivalence the duplicate-run tests pin."""
+    from . import amo_apply as _amo_mod
+    ops2, mask2, run_start, prefix = _amo_mod.combine_runs(ops, mask)
+    old_rep, local2 = amo_apply(local, ops2, mask2)
+    old = _amo_mod.reconstruct_runs(ops, mask, run_start, prefix, old_rep)
+    return old, local2
+
+
 def _fao(cur: Array, a: Array, code: Array) -> Array:
     return jnp.select([code == OP_FAA, code == OP_FOR, code == OP_FAND,
                        code == OP_FXOR],

@@ -43,9 +43,10 @@ def _np_val_of(key):
 # multi-batch sequence crosses every arm boundary.
 # ---------------------------------------------------------------------------
 class HtRunner:
-    def __init__(self, backend, nslots=64, max_probes=8):
+    def __init__(self, backend, nslots=64, max_probes=8, coalesce=False):
         self.backend = backend
         self.max_probes = max_probes
+        self.coalesce = coalesce
         self.ht = ht_mod.make_hashtable(P, nslots, VW)
         self.eng = am_mod.AMEngine(P)
         ht_mod.build_am_handlers(self.ht, self.eng, max_probes=max_probes)
@@ -57,7 +58,8 @@ class HtRunner:
         vals = _val_of(keys)
         if self.backend == "am":
             self.ht, ok, _ = ht_mod.insert_rpc(self.ht, self.eng, keys,
-                                               vals, valid=valid)
+                                               vals, valid=valid,
+                                               coalesce=self.coalesce)
         elif self.backend == "auto":
             self.ht, ok, _ = self.auto.ht_insert(
                 self.ht, keys, vals, promise=Promise.CRW, valid=valid,
@@ -66,13 +68,15 @@ class HtRunner:
             self.ht, ok, _ = ht_mod.insert_rdma(
                 self.ht, keys, vals, promise=Promise.CRW, valid=valid,
                 max_probes=self.max_probes,
-                fused=self.backend == "rdma_fused")
+                fused=self.backend == "rdma_fused",
+                coalesce=self.coalesce)
         return np.asarray(ok)
 
     def find(self, keys, promise=Promise.CR, valid=None):
         if self.backend == "am":
             found, vals = ht_mod.find_rpc(self.ht, self.eng, keys,
-                                          valid=valid)
+                                          valid=valid,
+                                          coalesce=self.coalesce)
         elif self.backend == "auto":
             self.ht, found, vals = self.auto.ht_find(
                 self.ht, keys, promise=promise, valid=valid,
@@ -81,7 +85,8 @@ class HtRunner:
             self.ht, found, vals = ht_mod.find_rdma(
                 self.ht, keys, promise=promise, valid=valid,
                 max_probes=self.max_probes,
-                fused=self.backend == "rdma_fused")
+                fused=self.backend == "rdma_fused",
+                coalesce=self.coalesce)
         return np.asarray(found), np.asarray(vals)
 
 
@@ -470,6 +475,163 @@ def test_skew_statistic_matches_route_plan():
     assert ad_mod.batch_skew(hot, P) == pytest.approx(P)
     plan = routing.make_plan(hot, cap=9)
     assert float(routing.plan_skew(plan)) == pytest.approx(P)
+
+
+# ---------------------------------------------------------------------------
+# Coalescing conformance (DESIGN.md §6): duplicate-heavy streams must be
+# invisible — oracle == coalesced == uncoalesced on every arm.
+# ---------------------------------------------------------------------------
+def _zipf_dup_keys(rng, n_universe, shape, alpha=1.2):
+    universe = rng.choice(np.arange(1, 1 << 20), size=n_universe,
+                          replace=False)
+    probs = 1.0 / np.arange(1, n_universe + 1) ** alpha
+    probs /= probs.sum()
+    return jnp.asarray(rng.choice(universe, size=shape, p=probs), jnp.int32)
+
+
+def test_ht_zipfian_duplicate_stream_all_arms_coalesced_agree():
+    """Zipfian (duplicate-heavy) insert/find streams: visible results are
+    identical across {am, rdma, rdma_fused, auto} × {coalesce on, off} and
+    match the dict oracle. max_probes covers the worst duplicate group so
+    probe exhaustion stays out of the domain (DESIGN.md §4)."""
+    rng = np.random.default_rng(20)
+    runners = {}
+    for b in HT_BACKENDS:
+        runners[b] = HtRunner(b, nslots=256, max_probes=64)
+        if b != "auto":  # auto coalesces by itself when dedup < 1
+            runners[b + "+co"] = HtRunner(b, nslots=256, max_probes=64,
+                                          coalesce=True)
+    oracle = HtOracle()
+    for step in range(3):
+        keys = _zipf_dup_keys(rng, 12, (P, 8))
+        oks = {b: r.insert(keys) for b, r in runners.items()}
+        oks["oracle"] = oracle.insert(keys)
+        _assert_all_agree(oks, f"zipf insert ok step {step}")
+        probe = _zipf_dup_keys(rng, 12, (P, 8))
+        founds = {b: r.find(probe) for b, r in runners.items()}
+        founds["oracle"] = oracle.find(probe)
+        _assert_all_agree({b: f[0] for b, f in founds.items()},
+                          f"zipf found step {step}")
+        _assert_all_agree({b: f[1] for b, f in founds.items()},
+                          f"zipf vals step {step}")
+
+
+def test_ht_dup_key_find_coalesced_single_probe():
+    """A find batch that repeats one hot key everywhere ships ONE request
+    row per origin (checked via the coalescing structure) and still
+    returns every duplicate its record."""
+    from repro.core import routing
+    rng = np.random.default_rng(21)
+    runners = {b: HtRunner(b, nslots=128, max_probes=16)
+               for b in HT_BACKENDS}
+    co_runners = {b + "+co": HtRunner(b, nslots=128, max_probes=16,
+                                      coalesce=True)
+                  for b in HT_BACKENDS if b != "auto"}
+    runners.update(co_runners)
+    base = _distinct_keys(rng, (P, 4))
+    for r in runners.values():
+        r.insert(base)
+    hot = jnp.broadcast_to(base[:1, :1], (P, 8)).astype(jnp.int32)
+    founds = {b: r.find(hot) for b, r in runners.items()}
+    _assert_all_agree({b: f[0] for b, f in founds.items()}, "hot found")
+    _assert_all_agree({b: f[1] for b, f in founds.items()}, "hot vals")
+    assert next(iter(founds.values()))[0].all()
+    dst = jnp.zeros((P, 8), jnp.int32)
+    co = routing.coalesce(dst, jnp.zeros((P, 8), jnp.int32),
+                          match=hot[..., None])
+    np.testing.assert_array_equal(np.asarray(co.rows_out), np.ones(P))
+
+
+def test_window_repeated_cas_fao_one_slot_coalesced_bit_exact():
+    """Repeated CAS / FAO hammering ONE slot (the Fig. 3 single-variable
+    pathology): the coalesced engine returns bit-identical fetched values
+    and final state, including the chained CAS outcomes, matching the
+    sequential kernel oracle."""
+    from repro.core import window as win_mod
+    from repro.kernels import ref
+    rng = np.random.default_rng(22)
+    for trial in range(3):
+        win = win_mod.make_window(P, 8)
+        dst = jnp.asarray(rng.integers(0, P, (P, 10)), jnp.int32)
+        off = jnp.zeros((P, 10), jnp.int32)
+        operand = jnp.asarray(rng.integers(-3, 4, (P, 10)), jnp.int32)
+        o1, w1 = win_mod.rdma_fao(win, dst, off, operand,
+                                  win_mod.AmoKind.FAA)
+        o2, w2 = win_mod.rdma_fao(win, dst, off, operand,
+                                  win_mod.AmoKind.FAA, coalesce=True)
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        np.testing.assert_array_equal(np.asarray(w1.data),
+                                      np.asarray(w2.data))
+        # chained CAS 0->1 on one slot: exactly one winner, identical set
+        c1, v1 = win_mod.rdma_cas(win, dst, off, 0, trial + 1)
+        c2, v2 = win_mod.rdma_cas(win, dst, off, 0, trial + 1,
+                                  coalesce=True)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(v1.data),
+                                      np.asarray(v2.data))
+        # and the owner-lane duplicate-run combining agrees with the
+        # sequential oracle on the same traffic shape
+        ops = np.zeros((12, 4), np.int32)
+        ops[:, 1] = rng.integers(2, 7, 12)
+        ops[:, 2] = rng.integers(-2, 3, 12)
+        ops[:, 3] = rng.integers(-2, 3, 12)
+        local = jnp.asarray(rng.integers(0, 9, (8,)), jnp.int32)
+        mask = jnp.ones((12,), bool)
+        old_a, loc_a = ref.amo_apply(local, jnp.asarray(ops), mask)
+        old_b, loc_b = ref.amo_apply_combined(local, jnp.asarray(ops), mask)
+        np.testing.assert_array_equal(np.asarray(old_a), np.asarray(old_b))
+        np.testing.assert_array_equal(np.asarray(loc_a), np.asarray(loc_b))
+
+
+def test_queue_coalesced_backends_agree():
+    """Queue push/pop with coalesced ticket FAOs: bit-identical to every
+    other backend and to the FIFO oracle."""
+    rng = np.random.default_rng(23)
+
+    class CoQRunner(QRunner):
+        def push(self, vals, valid=None):
+            self.q, ok = q_mod.push_rdma(self.q, vals, promise=Promise.CRW,
+                                         valid=valid, coalesce=True)
+            return np.asarray(ok)
+
+        def pop(self, n):
+            self.q, got, vals = q_mod.pop_rdma(self.q, n,
+                                               promise=Promise.CRW,
+                                               coalesce=True)
+            return np.asarray(got), np.asarray(vals)
+
+    runners = {b: QRunner(b, capacity=128) for b in Q_BACKENDS}
+    runners["rdma+co"] = CoQRunner("rdma", capacity=128)
+    oracle = QOracle(128)
+    for step in range(3):
+        vals = _batch_vals(rng, 4)
+        oks = {b: r.push(vals) for b, r in runners.items()}
+        oks["oracle"] = oracle.push(vals)
+        _assert_all_agree(oks, f"co push ok step {step}")
+        pops = {b: r.pop(3) for b, r in runners.items()}
+        pops["oracle"] = oracle.pop(3)
+        _assert_all_agree({b: g for b, (g, _) in pops.items()},
+                          f"co pop got step {step}")
+        _assert_all_agree({b: v for b, (_, v) in pops.items()},
+                          f"co pop vals step {step}")
+
+
+def test_auto_records_dedup_and_coalesces_duplicate_batches():
+    """The adaptive chooser's third online signal: a duplicate-heavy batch
+    records dedup < 1 in its Decision and runs the non-seed arms with
+    coalescing on; a distinct-key batch records dedup == 1 and stays
+    uncoalesced."""
+    rng = np.random.default_rng(24)
+    r = HtRunner("auto", nslots=256, max_probes=64)
+    dup = _zipf_dup_keys(rng, 6, (P, 8))
+    r.insert(dup)
+    dec = r.auto.log[-1]
+    assert dec.dedup < 1.0
+    assert dec.coalesce == (dec.arm != "rdma")
+    distinct = _distinct_keys(rng, (P, 8))
+    r.insert(distinct)
+    dec = r.auto.log[-1]
+    assert dec.dedup == 1.0 and not dec.coalesce
 
 
 def test_hypothesis_ht_conformance():

@@ -189,3 +189,58 @@ def test_predict_arm_covers_all_arms_and_matches_predict():
         assert am != pt  # busy target: the PT arm actually differs
     with pytest.raises(ValueError):
         cm.predict_arm(cm.DSOp.HT_FIND, Promise.CR, "nope")
+
+
+# ---------------------------------------------------------------------------
+# Coalescing pricing (DESIGN.md §6): the distinct-row factor
+# ---------------------------------------------------------------------------
+def test_coalesced_prediction_cheaper_under_duplicates():
+    """With real duplicate traffic (dedup well below 1) the coalesced
+    prediction undercuts the uncoalesced one for every RDMA formula, on
+    both parameter sets; monotone: fewer distinct rows -> cheaper."""
+    cases = [(cm.DSOp.HT_INSERT, Promise.CRW), (cm.DSOp.HT_INSERT,
+                                                Promise.CW),
+             (cm.DSOp.HT_FIND, Promise.CRW), (cm.DSOp.HT_FIND, Promise.CR)]
+    for params in PARAMS:
+        for op, promise in cases:
+            prev = None
+            for rho in (0.8, 0.5, 0.2, 0.05):
+                s = OpStats(expected_probes=2.0, skew=4.0, dedup=rho)
+                co = cm.predict(op, promise, Backend.RDMA, s, params,
+                                fused=True, coalesce=True)
+                unc = cm.predict(op, promise, Backend.RDMA, s, params,
+                                 fused=True, coalesce=False)
+                assert co < unc, (op, promise, rho, params.name)
+                if prev is not None:
+                    assert co <= prev
+                prev = co
+
+
+def test_predict_arm_prices_dedup_signal():
+    """predict_arm: dedup < 1 turns the distinct-row factor on for the
+    fused/AM arms and leaves the seed rdma arm untouched."""
+    dup = OpStats(expected_probes=2.0, skew=4.0, dedup=0.25)
+    uni = dataclasses.replace(dup, dedup=1.0)
+    for params in PARAMS:
+        for op, promise in ((cm.DSOp.HT_INSERT, Promise.CRW),
+                            (cm.DSOp.HT_FIND, Promise.CR)):
+            assert cm.predict_arm(op, promise, "rdma_fused", dup,
+                                  params) < cm.predict_arm(
+                op, promise, "rdma_fused", uni, params)
+            assert cm.predict_arm(op, promise, "rdma", dup,
+                                  params) == cm.predict_arm(
+                op, promise, "rdma", uni, params)
+            assert cm.predict_arm(op, promise, "am", dup,
+                                  params) < cm.predict_arm(
+                op, promise, "am", uni, params)
+
+
+def test_calibrate_roundtrips_combine_term():
+    cal = cm.calibrate({"combine": 0.5}, base=cm.TPU_V5E_ICI)
+    assert cal.combine == 0.5
+    s = OpStats(dedup=0.5)
+    cheap = cm.predict(cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA, s,
+                       cm.TPU_V5E_ICI, coalesce=True)
+    dear = cm.predict(cm.DSOp.HT_FIND, Promise.CR, Backend.RDMA, s, cal,
+                      coalesce=True)
+    assert dear - cheap == pytest.approx(0.5 - cm.TPU_V5E_ICI.combine)

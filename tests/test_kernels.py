@@ -212,3 +212,56 @@ def test_fused_lane_integration():
         kops._USE_PALLAS = prev
     for x, y in zip(a, b):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Duplicate-run combining (DESIGN.md §6) at the owner lane
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("P,L,m,span", [(2, 32, 16, 2), (3, 64, 40, 4),
+                                        (1, 16, 8, 1)])
+def test_amo_combine_runs_bit_exact_all_lanes(P, L, m, span):
+    """ops.amo_apply(combine_runs=True) == the plain serialized apply on
+    duplicate-heavy op lists (offsets drawn from a tiny span so runs are
+    long), across the ref, XLA, and Pallas lanes."""
+    from repro.kernels import ops as kops
+    local = jnp.asarray(RNG.integers(0, 100, (P, L)), jnp.int32)
+    ops = np.zeros((P, m, 4), np.int32)
+    ops[..., 0] = RNG.integers(0, span, (P, m))
+    ops[..., 1] = RNG.integers(0, 7, (P, m))
+    ops[..., 2] = RNG.integers(-5, 6, (P, m))
+    ops[..., 3] = RNG.integers(-5, 6, (P, m))
+    mask = jnp.asarray(RNG.random((P, m)) > 0.15)
+    ops = jnp.asarray(ops)
+    old_ref, loc_ref = kops.amo_apply(local, ops, mask, use_pallas=False)
+    for use_pallas in (False, True):
+        old_c, loc_c = kops.amo_apply(local, ops, mask,
+                                      use_pallas=use_pallas,
+                                      combine_runs=True)
+        np.testing.assert_array_equal(np.asarray(old_ref),
+                                      np.asarray(old_c))
+        np.testing.assert_array_equal(np.asarray(loc_ref),
+                                      np.asarray(loc_c))
+    # the sequential-oracle composition agrees too
+    for p in range(P):
+        old_s, loc_s = ref.amo_apply_combined(local[p], ops[p], mask[p])
+        np.testing.assert_array_equal(np.asarray(old_ref[p]),
+                                      np.asarray(old_s))
+        np.testing.assert_array_equal(np.asarray(loc_ref[p]),
+                                      np.asarray(loc_s))
+
+
+def test_combine_runs_actually_shortens_hot_lists():
+    """Structure check: a single-variable FAA hammer combines to ONE
+    surviving op per shard with the summed operand."""
+    from repro.kernels.amo_apply import combine_runs
+    m = 24
+    ops = np.zeros((m, 4), np.int32)
+    ops[:, 1] = 3  # OP_FAA
+    ops[:, 2] = np.arange(1, m + 1)
+    mask = jnp.ones((m,), bool)
+    ops2, mask2, run_start, prefix = combine_runs(jnp.asarray(ops), mask)
+    assert int(mask2.sum()) == 1
+    assert int(ops2[0, 2]) == m * (m + 1) // 2
+    np.testing.assert_array_equal(np.asarray(run_start), np.zeros(m))
+    np.testing.assert_array_equal(np.asarray(prefix),
+                                  np.arange(m) * (np.arange(m) + 1) // 2)

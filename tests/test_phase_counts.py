@@ -137,6 +137,74 @@ def test_planned_batch_has_one_occupancy_exchange():
     assert c.mask_exchanges() == 3  # lock FAO + get + unlock FAO
 
 
+def test_coalescing_adds_zero_exchanges():
+    """The §6 pin: sender-side coalescing is pure local compute. A
+    coalesced component phase issues exactly the planned engine's
+    exchange counts (put=1, get/cas/fao=2), a coalesce_plan pays the same
+    ONE occupancy exchange as make_plan, and a coalesced AM dispatch stays
+    at 2 exchanges."""
+    dst, off, win, vals = _fixtures()
+    hot = jnp.zeros_like(off)  # everything duplicates onto one word
+    c = ExchangeCounter()
+    # phase-local coalescing, unplanned: same counts as the unplanned
+    # engine (payload + mask [+ reply])
+    assert c.run(lambda: window.rdma_put(win, dst, hot, vals,
+                                         coalesce=True)) == 2
+    assert c.run(lambda: window.rdma_fao(win, dst, hot, 1, AmoKind.FAA,
+                                         coalesce=True)[1].data) == 3
+    # coalesce_plan: ONE occupancy exchange, exactly PLAN_EXCHANGES
+    assert c.run(lambda: routing.coalesce_plan(dst, hot, cap=6).plan.mask
+                 ) == 1
+    assert c.mask_exchanges() == cm.PLAN_EXCHANGES == 1
+    cplan = routing.coalesce_plan(dst, hot, cap=6)
+    assert c.run(lambda: window.rdma_get(win, dst, hot, 2,
+                                         plan=cplan)) == 2
+    assert c.mask_exchanges() == 0
+    assert c.run(lambda: window.rdma_cas(win, dst, hot, 0, 1,
+                                         plan=cplan)[1].data) == 2
+    assert c.run(lambda: window.rdma_fao_get(win, dst, hot, 1, AmoKind.FAA,
+                                             hot, 2, plan=cplan)[2].data
+                 ) == 2
+    # coalesced AM dispatch: the paper's 2-exchange round trip, unchanged
+    eng = am_mod.AMEngine(P)
+    echo = eng.register("echo", lambda l, p, m: (l, p[:, :1]),
+                        reply_width=1)
+    state = jnp.zeros((P, 4), jnp.int32)
+    plan = routing.make_plan(dst, cap=6)
+    assert c.run(lambda: eng.dispatch(echo, state, dst, vals, plan=plan,
+                                      coalesce=True)) == 2
+
+
+def test_coalesced_fused_insert_exchanges_match_uncoalesced():
+    """A whole coalesced fused C_RW insert traces the same phase
+    structure as the uncoalesced one — ONE plan occupancy exchange + the
+    probe request/reply pair — while on duplicate-heavy batches the
+    adaptive while_loop runs FEWER probe phases at runtime (every
+    duplicate group resolves with its representative's first claim,
+    visible in the returned probe counts)."""
+    from repro.core import hashtable as ht_mod
+    keys = jnp.broadcast_to(jnp.arange(1, P + 1, dtype=jnp.int32)[:, None],
+                            (P, 6)).astype(jnp.int32)  # 6 dups per origin
+    vals = jnp.stack([keys, keys], axis=-1)
+    c = ExchangeCounter()
+    got_unc = c.run(lambda: ht_mod.insert_rdma(
+        ht_mod.make_hashtable(P, 64, 2), keys, vals, promise=Promise.CRW,
+        max_probes=8, fused=True)[0].win.data)
+    _, _, probes_co = ht_mod.insert_rdma(
+        ht_mod.make_hashtable(P, 64, 2), keys, vals, promise=Promise.CRW,
+        max_probes=8, fused=True, coalesce=True)
+    got_co = c.run(lambda: ht_mod.insert_rdma(
+        ht_mod.make_hashtable(P, 64, 2), keys, vals, promise=Promise.CRW,
+        max_probes=8, fused=True, coalesce=True)[0].win.data)
+    assert c.mask_exchanges() == 1  # still ONE plan occupancy exchange
+    assert got_co == got_unc        # zero extra exchanges, trace-level
+    _, _, probes_unc = ht_mod.insert_rdma(
+        ht_mod.make_hashtable(P, 64, 2), keys, vals, promise=Promise.CRW,
+        max_probes=8, fused=True)
+    assert int(probes_co.max()) == 1      # every dup rides the rep's claim
+    assert int(probes_unc.max()) == 6     # uncoalesced dups probe onward
+
+
 def test_queue_exchange_counts_agree_with_costmodel():
     """Queue push/pop engine exchanges match costmodel.exchange_count (the
     §2 table), extending the hash-table cross-check in

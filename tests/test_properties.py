@@ -163,6 +163,105 @@ def test_planned_route_reuse_bit_exact(data):
 
 
 # ---------------------------------------------------------------------------
+# Coalescing (DESIGN.md §6) == uncoalesced engine on randomized
+# duplicate-heavy batches, at the window AND data-structure level
+# ---------------------------------------------------------------------------
+@SET
+@given(st.data())
+def test_window_coalesce_bit_exact(data):
+    """Every coalescible window op: sender-side combining returns the
+    exact per-op fetched values and final window state of the serialized
+    uncoalesced engine, on batches drawn over a tiny offset space (heavy
+    duplicate runs) with random valid masks."""
+    from repro.core import window as win_mod
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    P, n = 3, data.draw(st.integers(1, 10))
+    win = win_mod.make_window(P, 32)
+    dst = jnp.asarray(rng.integers(0, P, (P, n)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 4, (P, n)), jnp.int32)
+    valid = jnp.asarray(rng.random((P, n)) > 0.25)
+    kind = data.draw(st.sampled_from([AmoKind.FAA, AmoKind.FOR,
+                                      AmoKind.FAND, AmoKind.FXOR]))
+    operand = jnp.asarray(rng.integers(-3, 4, (P, n)), jnp.int32)
+    o1, w1 = win_mod.rdma_fao(win, dst, off, operand, kind, valid=valid)
+    o2, w2 = win_mod.rdma_fao(win, dst, off, operand, kind, valid=valid,
+                              coalesce=True)
+    np.testing.assert_array_equal(np.asarray(w1.data), np.asarray(w2.data))
+    v = np.asarray(valid)
+    np.testing.assert_array_equal(np.asarray(o1)[v], np.asarray(o2)[v])
+    cmp = jnp.asarray(rng.integers(0, 2, (P, n)), jnp.int32)
+    new = jnp.asarray(rng.integers(1, 4, (P, n)), jnp.int32)
+    c1, x1 = win_mod.rdma_cas(win, dst, off, cmp, new, valid=valid)
+    c2, x2 = win_mod.rdma_cas(win, dst, off, cmp, new, valid=valid,
+                              coalesce=True)
+    np.testing.assert_array_equal(np.asarray(x1.data), np.asarray(x2.data))
+    np.testing.assert_array_equal(np.asarray(c1)[v], np.asarray(c2)[v])
+    vals = jnp.asarray(rng.integers(1, 99, (P, n, 2)), jnp.int32)
+    p1 = win_mod.rdma_put(win, dst, off * 2, vals, valid=valid)
+    p2 = win_mod.rdma_put(win, dst, off * 2, vals, valid=valid,
+                          coalesce=True)
+    np.testing.assert_array_equal(np.asarray(p1.data), np.asarray(p2.data))
+    g1 = win_mod.rdma_get(p1, dst, off, 3, valid=valid)
+    g2 = win_mod.rdma_get(p2, dst, off, 3, valid=valid, coalesce=True)
+    np.testing.assert_array_equal(np.asarray(g1)[v], np.asarray(g2)[v])
+
+
+@SET
+@given(st.data())
+def test_ht_coalesced_duplicate_stream_conformant(data):
+    """Duplicate-heavy (zipfian-ish) insert+find: the coalesced fused
+    engine is visibly conformant with the uncoalesced one — identical ok
+    flags and identical find results for every key, at both promises."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    P, n = 2, data.draw(st.integers(2, 8))
+    universe = rng.choice(np.arange(1, 3000), size=4, replace=False)
+    keys = jnp.asarray(rng.choice(universe, size=(P, n)), jnp.int32)
+    vals = ((keys * 13 + 5) & 0xFFFF)[..., None]
+    promise = data.draw(st.sampled_from([Promise.CRW, Promise.CW]))
+    ht_a = ht_mod.make_hashtable(P, 64, 1)
+    ht_b = ht_mod.make_hashtable(P, 64, 1)
+    ht_a, ok_a, _ = ht_mod.insert_rdma(ht_a, keys, vals, promise=promise,
+                                       max_probes=32, fused=True)
+    ht_b, ok_b, _ = ht_mod.insert_rdma(ht_b, keys, vals, promise=promise,
+                                       max_probes=32, fused=True,
+                                       coalesce=True)
+    np.testing.assert_array_equal(np.asarray(ok_a), np.asarray(ok_b))
+    probe = jnp.asarray(rng.choice(np.concatenate([universe,
+                                                   np.arange(5000, 5004)]),
+                                   size=(P, n)), jnp.int32)
+    find_p = data.draw(st.sampled_from([Promise.CR, Promise.CRW]))
+    _, f_a, v_a = ht_mod.find_rdma(ht_a, probe, promise=find_p,
+                                   max_probes=32, fused=True)
+    _, f_b, v_b = ht_mod.find_rdma(ht_b, probe, promise=find_p,
+                                   max_probes=32, fused=True, coalesce=True)
+    np.testing.assert_array_equal(np.asarray(f_a), np.asarray(f_b))
+    np.testing.assert_array_equal(np.asarray(v_a), np.asarray(v_b))
+
+
+@SET
+@given(st.data())
+def test_kernel_duplicate_run_combining_bit_exact(data):
+    """ops.amo_apply(combine_runs=True) == plain serialized apply on
+    random op lists with heavy duplicate runs, on both lanes."""
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    m = data.draw(st.integers(1, 24))
+    local = jnp.asarray(rng.integers(0, 50, (2, 16)), jnp.int32)
+    ops = np.zeros((2, m, 4), np.int32)
+    ops[..., 0] = rng.integers(0, 3, (2, m))
+    ops[..., 1] = rng.integers(0, 7, (2, m))
+    ops[..., 2] = rng.integers(-4, 5, (2, m))
+    ops[..., 3] = rng.integers(-4, 5, (2, m))
+    mask = jnp.asarray(rng.random((2, m)) > 0.2)
+    o1, l1 = kops.amo_apply(local, jnp.asarray(ops), mask,
+                            use_pallas=False)
+    o2, l2 = kops.amo_apply(local, jnp.asarray(ops), mask,
+                            use_pallas=False, combine_runs=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# ---------------------------------------------------------------------------
 # Queue FIFO + conservation under random push/pop batches
 # ---------------------------------------------------------------------------
 @SET
