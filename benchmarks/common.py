@@ -54,11 +54,10 @@ SCENARIOS = ("uniform", "zipfian", "hot")
 
 
 def np_hash_mix(k: np.ndarray) -> np.ndarray:
-    """Numpy mirror of core.hashtable.hash_mix (32-bit xorshift-multiply)."""
-    k = np.asarray(k).astype(np.uint32)
-    k = (k ^ (k >> np.uint32(16))) * np.uint32(0x85EBCA6B)
-    k = (k ^ (k >> np.uint32(13))) * np.uint32(0xC2B2AE35)
-    return k ^ (k >> np.uint32(16))
+    """Numpy mirror of core.hashtable.hash_mix — delegates to the single
+    copy of the constants in core.hashtable.hash_mix_np."""
+    from repro.core.hashtable import hash_mix_np
+    return hash_mix_np(k)
 
 
 def owner_of(keys: np.ndarray, nranks: int) -> np.ndarray:

@@ -11,13 +11,15 @@ import traceback
 
 def main() -> None:
     from . import (adaptive_bench, attentiveness, components,
-                   hashtable_bench, queue_bench, roofline, trajectory)
+                   hashtable_bench, pipeline_bench, queue_bench, roofline,
+                   trajectory)
     sections = [
         ("components (paper Fig. 3 / Table I)", components.main),
         ("queue push (paper Fig. 4)", queue_bench.main),
         ("hash table (paper Fig. 5)", hashtable_bench.main),
         ("attentiveness (paper Fig. 6)", attentiveness.main),
         ("adaptive backend selection (DESIGN.md §4)", adaptive_bench.main),
+        ("pipelined batch engine (DESIGN.md §7)", pipeline_bench.main),
         ("roofline (assignment §Roofline)", roofline.main),
         ("perf trajectory (BENCH_trajectory.json)", trajectory.main),
     ]

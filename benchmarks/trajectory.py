@@ -93,6 +93,14 @@ def collect() -> dict:
                 "us_coalesced": co.get("ht_hot_insert_find_coalesced"),
             }
 
+    pl = _load("BENCH_pipeline.json")
+    if pl:
+        entry["pipeline"] = {
+            "speedup_depth2": pl.get("speedup_depth2"),
+            "per_batch_us": pl.get("per_batch_us"),
+            "busy_us": pl.get("busy_us"),
+        }
+
     ad = _load("BENCH_adaptive.json")
     if ad:
         scen = ad.get("scenarios", ad)

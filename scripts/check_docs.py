@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Docs consistency check (scripts/ci.sh):
+
+1. README.md exists and is non-trivial.
+2. Every `DESIGN.md §N` / `DESIGN §N` reference — in README.md, docs/,
+   benchmarks/, tests/, and the source tree — resolves to a real `## §N`
+   section of DESIGN.md (stale section numbers after a renumbering are
+   exactly the rot this catches; PR 3 renumbered §4→§5 once already).
+3. Every repo-relative path README.md mentions in backticks exists.
+4. `python -m compileall` on examples/ (and scripts/) — docs-adjacent
+   code that the test suite does not import must still parse.
+
+Exit 0 = clean; prints every violation otherwise.
+"""
+from __future__ import annotations
+
+import compileall
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+SCAN_GLOBS = ["README.md", "docs/*.md", "benchmarks/*.py", "tests/*.py",
+              "src/repro/**/*.py", "examples/*.py"]
+REF_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)")
+SECTION_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+# backticked tokens that look like repo paths (contain / or end in .md/.py/.sh)
+PATH_RE = re.compile(r"`([A-Za-z0-9_.\-/]+?\.(?:py|md|sh|json|csv))`")
+
+
+def main() -> int:
+    errors = []
+
+    design = REPO / "DESIGN.md"
+    readme = REPO / "README.md"
+    if not readme.exists() or len(readme.read_text()) < 500:
+        errors.append("README.md missing or trivially short")
+    sections = set(SECTION_RE.findall(design.read_text()))
+
+    for pattern in SCAN_GLOBS:
+        for path in sorted(REPO.glob(pattern)):
+            text = path.read_text(errors="replace")
+            for num in REF_RE.findall(text):
+                if num not in sections:
+                    errors.append(
+                        f"{path.relative_to(REPO)}: references DESIGN.md "
+                        f"§{num}, but DESIGN.md has only "
+                        f"§{{{', '.join(sorted(sections))}}}")
+
+    if readme.exists():
+        for ref in PATH_RE.findall(readme.read_text()):
+            # artifacts are generated, not committed — existence optional
+            if ref.startswith("artifacts/"):
+                continue
+            if not (REPO / ref).exists():
+                errors.append(f"README.md: mentioned path `{ref}` "
+                              "does not exist")
+
+    for d in ("examples", "scripts"):
+        if not compileall.compile_dir(str(REPO / d), quiet=1, force=True):
+            errors.append(f"compileall failed under {d}/")
+
+    if errors:
+        for e in errors:
+            print(f"DOCS CHECK FAIL: {e}")
+        return 1
+    print(f"docs check OK ({len(sections)} DESIGN sections, "
+          "README paths + §-references resolve, examples compile)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,11 @@
 #    also refreshes artifacts/bench/BENCH_adaptive.json.
 # 3. attentiveness smoke: seeded fast path asserting the Fig. 6 structure
 #    (AM latency grows with target busy time).
+# 4. pipeline smoke: depth-2 overlap >= 1.25x over depth-1 on the P=8
+#    insert+find mix (DESIGN.md §7), refreshing
+#    artifacts/bench/BENCH_pipeline.json.
+# 5. docs check: README exists, DESIGN §-references and README paths
+#    resolve, examples/ compiles (scripts/check_docs.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -32,5 +37,11 @@ python -m benchmarks.adaptive_bench --smoke
 
 echo "== attentiveness smoke (Fig. 6 structure) =="
 python -m benchmarks.attentiveness --smoke
+
+echo "== pipeline overlap smoke (DESIGN.md §7, depth-2 >= 1.25x) =="
+python -m benchmarks.pipeline_bench --smoke
+
+echo "== docs check (README / DESIGN references, examples compile) =="
+python scripts/check_docs.py
 
 echo "ci OK"

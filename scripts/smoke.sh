@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Smoke check: tier-1 tests + the fused-engine acceptance benchmark.
 #
-#   scripts/smoke.sh            # from anywhere
+#   scripts/smoke.sh                    # from anywhere: the full smoke
+#   scripts/smoke.sh --smoke-pipeline   # ONLY the §7 pipeline overlap gate
 #
 # 1. tier-1: the full pytest suite, compared against the known
 #    pre-existing failure set (scripts/known_failures.txt — jax-version
@@ -15,11 +16,22 @@
 #    planned/fused path — >= 1.3x speedup, engine-logged wire rows
 #    matching the coalescing structure's dedup ratio.
 #
-# scripts/ci.sh is the CI-facing gate (tier-1 + adaptive + attentiveness).
+# 5. pipeline overlap gate (DESIGN.md §7): depth-2 >= 1.25x over depth-1
+#    on the P=8 insert+find mix -> artifacts/bench/BENCH_pipeline.json.
+#
+# scripts/ci.sh is the CI-facing gate (tier-1 + adaptive + attentiveness
+# + pipeline + docs check).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--smoke-pipeline" ]]; then
+  echo "== pipeline overlap gate only (DESIGN.md §7) =="
+  python -m benchmarks.pipeline_bench --smoke
+  echo "smoke-pipeline OK"
+  exit 0
+fi
 
 echo "== tier-1 tests (new failures only fail the smoke) =="
 set +e
@@ -44,5 +56,8 @@ echo "== coalescing gate (hot-owner insert+find, dedup ratio reported) =="
 # runs the workload ONCE: gates the speedup + wire-row cross-check, then
 # folds its row into the JSON artifact written above
 python -m benchmarks.components --smoke-coalesce
+
+echo "== pipeline overlap gate (DESIGN.md §7, depth-2 >= 1.25x) =="
+python -m benchmarks.pipeline_bench --smoke
 
 echo "smoke OK"

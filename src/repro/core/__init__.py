@@ -1,15 +1,17 @@
 # The paper's primary contribution: PGAS distributed data structures with
 # selectable RDMA / RPC backends + the analytical cost model that picks
 # between them. See DESIGN.md §2 for the TPU-native translation.
-from . import (adaptive, am, costmodel, hashtable, queue, routing, types,
-               window)
+from . import (adaptive, am, costmodel, hashtable, pipeline, queue, routing,
+               types, window)
 from .adaptive import AdaptiveEngine, Decision
+from .pipeline import Handle, Pipeline
 from .types import AmoKind, Backend, OpStats, Promise
 from .window import Window, make_window, rdma_cas, rdma_fao, rdma_get, rdma_put
 
 __all__ = [
-    "adaptive", "am", "costmodel", "hashtable", "queue", "routing", "types",
-    "window", "AdaptiveEngine", "Decision",
+    "adaptive", "am", "costmodel", "hashtable", "pipeline", "queue",
+    "routing", "types", "window", "AdaptiveEngine", "Decision",
+    "Handle", "Pipeline",
     "AmoKind", "Backend", "OpStats", "Promise",
     "Window", "make_window", "rdma_cas", "rdma_fao", "rdma_get", "rdma_put",
 ]

@@ -204,6 +204,27 @@ class AdaptiveEngine:
                 used.add("model")
         return out, ("mixed" if len(used) > 1 else used.pop())
 
+    def peek_arm(self, op: DSOp, promise: Promise,
+                 stats: Optional[OpStats] = None) -> str:
+        """The arm `decide` WOULD pick for this (op, promise, stats) —
+        without logging a Decision, advancing the round-robin cursor, or
+        consuming an exploration probe.
+
+        The async front-ends (hashtable.insert_async & friends, DESIGN.md
+        §7) call this at submit time to route AM-arm batches through the
+        deferred-dispatch queue (`Pipeline.submit(deferred=True)`); the
+        authoritative, logged decision still happens when the batch
+        stages. A peek/stage mismatch (an EWMA update landing in between)
+        is harmless — deferral only moves WHEN the batch stages, never
+        which arm runs it."""
+        if self.force_arm is not None:
+            return self.force_arm
+        if self.policy == "round_robin":
+            return self.arms[self._rr % len(self.arms)]
+        scores, _ = self.scores(op, promise, stats)
+        rank = {"rdma_fused": 0, "am": 1, "am_pt": 2, "rdma": 3}
+        return min(scores, key=lambda a: (scores[a], rank[a]))
+
     def decide(self, op: DSOp, promise: Promise, dst=None, valid=None,
                stats: Optional[OpStats] = None,
                nops: Optional[int] = None) -> Decision:
@@ -220,11 +241,14 @@ class AdaptiveEngine:
         dedup = s.dedup
         if nops is None:
             v = _concrete(valid)
-            d = _concrete(dst)
             if v is not None:
                 nops = int(v.sum())
-            elif d is not None:
-                nops = int(d.size)
+            elif dst is not None and not isinstance(dst, jax.core.Tracer):
+                # static shape — never materialize dst here: on the §7
+                # staging path that would serialize batch k+1 behind
+                # batch k's in-flight device work. Traced batches keep
+                # the documented batch_ops == 0 sentinel.
+                nops = int(np.prod(dst.shape))
             else:
                 nops = 0
         scores, source = self.scores(op, promise, s)

@@ -63,12 +63,51 @@ class AMEngine:
         # returns-and-clears for callers that do.
         self.dispatch_log: collections.deque = collections.deque(
             maxlen=dispatch_log_max)
+        # Deferred-dispatch queue (DESIGN.md §7): AM batches submitted
+        # through the pipeline engine wait here until the next *dispatch
+        # point* — the paper's attentiveness, made an explicit queue. The
+        # pipeline drains it whenever it enters the engine (an eager
+        # submit, a Handle.result(), a flush), so AM service latency is
+        # exactly the time to the next overlap window.
+        self._pending: collections.deque = collections.deque()
+        # dispatch points entered (drains, including empty ones): together
+        # with the inter-submit busy_wait knob this makes attentiveness a
+        # measurable quantity (benchmarks/pipeline_bench.py).
+        self.dispatch_points = 0
 
     def drain_dispatch_log(self):
         """Return and clear the (handler, decision, info) dispatch log."""
         out = list(self.dispatch_log)
         self.dispatch_log.clear()
         return out
+
+    # -- deferred dispatch (pipeline integration, DESIGN.md §7) ------------
+    @property
+    def pending_dispatches(self) -> int:
+        """Queued dispatch thunks awaiting the next dispatch point."""
+        return len(self._pending)
+
+    def queue_dispatch(self, thunk) -> None:
+        """Enqueue a zero-arg dispatch thunk for the next dispatch point.
+
+        Thunks run FIFO at `drain_dispatch_queue`; the engine stays
+        oblivious to what they do (they typically call `dispatch` and stash
+        the replies — see core/pipeline.py). Queueing models the paper's
+        attentiveness liability: remote progress happens only when the
+        target enters the runtime."""
+        self._pending.append(thunk)
+
+    def drain_dispatch_queue(self) -> int:
+        """Enter a dispatch point: service every queued dispatch, FIFO.
+
+        Returns the number of dispatches serviced. Counted in
+        `dispatch_points` whether or not anything was pending (an attentive
+        target polls on every entry)."""
+        self.dispatch_points += 1
+        count = len(self._pending)
+        while self._pending:
+            self._pending.popleft()()
+        return count
 
     def register(self, name: str, fn: HandlerFn, reply_width: int,
                  batched_fn=None) -> Handler:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, replace
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from .types import Backend, OpStats, Promise
 
@@ -295,22 +295,11 @@ def arm_coalesces(op: DSOp, arm: str, dedup: float) -> bool:
     return True
 
 
-def predict_arm(op: DSOp, promise: Promise, arm: str,
-                stats: Optional[OpStats] = None,
-                params: ComponentCosts = CORI_PHASE1) -> float:
-    """Per-op latency of one adaptive *arm* (see ARMS).
-
-    `rdma` / `rdma_fused` are the seed and planned+fused one-sided engines;
-    `am` / `am_pt` are aggregated active messages without / with a progress
-    thread (the paper Fig. 6 "PT" curve). The AUTO chooser in
-    core/adaptive.py calls this for every arm and takes the argmin.
-
-    The observed dedup ratio (stats.dedup, the adaptive layer's third
-    online signal) prices coalescing where the engine actually applies it
-    (`arm_coalesces`): duplicate traffic discounts the fused/AM arms with
-    the distinct-row factor — the seed `rdma` arm never coalesces and
-    keeps the plain formula."""
-    s = stats or OpStats()
+def _predict_arm_flat(op: DSOp, promise: Promise, arm: str, s: OpStats,
+                      params: ComponentCosts) -> float:
+    """Un-pipelined (lock-step) per-op latency of one arm — the sum of its
+    origin- and owner-side components. `predict_arm` applies the §7 overlap
+    interpolation on top of this."""
     co = arm_coalesces(op, arm, s.dedup)
     if arm == "rdma":
         return predict(op, promise, Backend.RDMA, s, params, fused=False)
@@ -326,6 +315,86 @@ def predict_arm(op: DSOp, promise: Promise, arm: str,
                        replace(s, progress_thread=True), params,
                        coalesce=co)
     raise ValueError(f"unknown arm {arm!r}; expected one of {ARMS}")
+
+
+def overlap_split(op: DSOp, promise: Promise, arm: str,
+                  stats: Optional[OpStats] = None,
+                  params: ComponentCosts = CORI_PHASE1
+                  ) -> Tuple[float, float]:
+    """Split one arm's flat cost into (origin_us, owner_us) — the two
+    pipeline stages of DESIGN.md §7.
+
+    origin_us — route/coalesce/plan construction and the send exchange:
+    the work batch *k+1* performs while batch *k* is still applying.
+    owner_us — everything attributable to target-side progress: the
+    serialized `amo_apply` owner lane of the one-sided arms, and the
+    handler compute plus the attentiveness delay of the AM arms. This is
+    the share the pipeline hides behind the next batch's origin stage.
+
+    Computed by differencing: owner_us = flat - flat|owner-terms-zeroed,
+    so the split composes correctly with the skew and dedup factors
+    (which scale both sides through `predict`). origin_us + owner_us ==
+    the flat prediction exactly."""
+    s = replace(stats or OpStats(), pipeline_depth=1)
+    total = _predict_arm_flat(op, promise, arm, s, params)
+    if arm in ("am", "am_pt"):
+        wire_params = replace(params, handler=0.0, pt_overhead=1.0)
+        wire_stats = replace(s, target_busy_us=0.0)
+    else:
+        wire_params = replace(params, amo_apply=0.0)
+        wire_stats = s
+    origin = _predict_arm_flat(op, promise, arm, wire_stats, wire_params)
+    origin = min(origin, total)
+    return origin, total - origin
+
+
+def predict_pipelined(op: DSOp, promise: Promise, arm: str,
+                      stats: Optional[OpStats] = None,
+                      params: ComponentCosts = CORI_PHASE1,
+                      depth: Optional[int] = None) -> float:
+    """Steady-state per-batch latency of one arm at pipeline depth d
+    (DESIGN.md §7):
+
+        T(d) = max(A, B) + min(A, B) / d
+
+    with (A, B) = `overlap_split` — a two-stage pipeline keeps d windows
+    in flight, so the shorter stage hides behind the longer one except for
+    the 1/d un-overlapped residue. d = 1 degenerates EXACTLY to the flat
+    sum A + B (the synchronous engine); d → ∞ approaches the max (perfect
+    overlap). `depth` defaults to stats.pipeline_depth."""
+    s = stats or OpStats()
+    d = max(1, int(s.pipeline_depth if depth is None else depth))
+    a, b = overlap_split(op, promise, arm, s, params)
+    return max(a, b) + min(a, b) / d
+
+
+def predict_arm(op: DSOp, promise: Promise, arm: str,
+                stats: Optional[OpStats] = None,
+                params: ComponentCosts = CORI_PHASE1) -> float:
+    """Per-op latency of one adaptive *arm* (see ARMS).
+
+    `rdma` / `rdma_fused` are the seed and planned+fused one-sided engines;
+    `am` / `am_pt` are aggregated active messages without / with a progress
+    thread (the paper Fig. 6 "PT" curve). The AUTO chooser in
+    core/adaptive.py calls this for every arm and takes the argmin.
+
+    The observed dedup ratio (stats.dedup, the adaptive layer's third
+    online signal) prices coalescing where the engine actually applies it
+    (`arm_coalesces`): duplicate traffic discounts the fused/AM arms with
+    the distinct-row factor — the seed `rdma` arm never coalesces and
+    keeps the plain formula.
+
+    stats.pipeline_depth > 1 (the pipelined engine, DESIGN.md §7) applies
+    the overlap term via `predict_pipelined`: the arm's owner-side share
+    (serialized apply lane, or handler + attentiveness for the AM arms)
+    overlaps the next batch's route+send, so owner-heavy arms — notably AM
+    under poor attentiveness — are discounted by exactly the latency the
+    pipeline hides, which is how the chooser learns to prefer AM arms once
+    overlap hides their handler latency."""
+    s = stats or OpStats()
+    if int(s.pipeline_depth) > 1:
+        return predict_pipelined(op, promise, arm, s, params)
+    return _predict_arm_flat(op, promise, arm, s, params)
 
 
 def calibrate(measured: Dict[str, float],

@@ -81,6 +81,32 @@ def _place(ht: DHashTable, keys: Array) -> Tuple[Array, Array]:
     return owner, start
 
 
+def hash_mix_np(keys):
+    """Host-side (numpy) mirror of `hash_mix` — THE single numpy copy of
+    the xorshift-multiply constants (benchmarks/common.py delegates here;
+    bit-equality with the jnp version is pinned by tests)."""
+    import numpy as np
+    k = np.asarray(keys).astype(np.uint32)
+    k = (k ^ (k >> 16)) * np.uint32(0x85EBCA6B)
+    k = (k ^ (k >> 13)) * np.uint32(0xC2B2AE35)
+    return k ^ (k >> 16)
+
+
+def place_np(nranks: int, nslots: int, keys):
+    """Host-side (numpy) mirror of `_place` — bit-identical owner/start.
+
+    The pipelined front-ends (DESIGN.md §7) use this to compute the skew
+    and dedup signals on the Python thread at submit time, so staging
+    batch k+1 never reads a device value (which would serialize behind
+    batch k's in-flight phases and defeat the overlap). Bit-equality with
+    the engine placement is pinned by tests/test_pipeline.py."""
+    import numpy as np
+    h = hash_mix_np(keys)
+    owner = (h % np.uint32(nranks)).astype(np.int32)
+    start = ((h // np.uint32(nranks)) % np.uint32(nslots)).astype(np.int32)
+    return owner, start
+
+
 # ---------------------------------------------------------------------------
 # RDMA backend
 # ---------------------------------------------------------------------------
@@ -448,6 +474,26 @@ def find_rpc(ht: DHashTable, engine: am_mod.AMEngine, keys: Array,
 # ---------------------------------------------------------------------------
 def insert(ht, keys, vals, *, promise=Promise.CRW, backend=Backend.AUTO,
            engine=None, adaptive=None, **kw):
+    """Batched distributed insert — the paper's §III-B1 op, any backend.
+
+    Args:
+      ht:      DHashTable.
+      keys:    (P, n) int32, distinct per batch for the RDMA arms (RPC is
+               insert-or-assign — DESIGN.md §4 conformance domain).
+      vals:    (P, n, val_words) int32.
+      promise: Promise.CRW (fully atomic) or CW (phasal writes).
+      backend: Backend or string — "auto" (default, cost-model arm per
+               batch, DESIGN.md §4), "rdma", or "rpc".
+      engine:  am.AMEngine for the RPC/AM arms.
+      adaptive: explicit AdaptiveEngine (default: cached per-nranks/engine).
+      **kw:    valid, max_probes (any backend); stats (AUTO only — the
+               chooser's OpStats); fused, coalesce (explicit "rdma" only —
+               AUTO picks fusion/coalescing per batch itself).
+
+    Returns (table', ok (P, n) bool, probes (P, n) int32). Visible results
+    are bit-identical across every backend on the conformance domain
+    (tests/test_conformance.py); tracer-safe — under jit the AUTO choice
+    degrades to the static model decision (DESIGN.md §4)."""
     backend = as_backend(backend)
     if backend == Backend.AUTO:
         from . import adaptive as ad
@@ -461,6 +507,13 @@ def insert(ht, keys, vals, *, promise=Promise.CRW, backend=Backend.AUTO,
 
 def find(ht, keys, *, promise=Promise.CR, backend=Backend.AUTO, engine=None,
          adaptive=None, **kw):
+    """Batched distributed find. Same backend selection as `insert`.
+
+    Args: as `insert` (promise CR = bare get per probe, CRW = read-locked).
+    Returns (table', found (P, n) bool, vals (P, n, val_words) int32) —
+    vals are zeros where not found. The table is returned because a C_RW
+    find mutates reader counts; for CR it is unchanged. Bit-identical
+    visible results across backends (tests/test_conformance.py)."""
     backend = as_backend(backend)
     if backend == Backend.AUTO:
         from . import adaptive as ad
@@ -471,3 +524,111 @@ def find(ht, keys, *, promise=Promise.CR, backend=Backend.AUTO, engine=None,
                                coalesce=kw.get("coalesce", False))
         return ht, found, vals
     return find_rdma(ht, keys, promise=promise, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (async) front-ends: submit through a core/pipeline.Pipeline
+# whose state is the DHashTable; returns a Handle instead of blocking
+# (DESIGN.md §7). Bit-exact vs. the synchronous front-ends above — forcing
+# immediately (depth=1, or result() right after submit) IS the sync path.
+# ---------------------------------------------------------------------------
+def _async_stats(ht, keys, valid, stats, depth: int):
+    """Fold the host-computable batch signals (skew, dedup via `place_np`)
+    and the pipeline depth into the cost-model stats WITHOUT reading any
+    device value — staging must never serialize behind in-flight phases."""
+    from dataclasses import replace as _rep
+
+    import numpy as np
+
+    from . import adaptive as ad
+    from .types import OpStats
+    s = stats or OpStats()
+    k = ad._concrete(keys)
+    if k is not None:
+        # 1.0 doubles as OpStats' "unknown" sentinel: nudge a legitimately
+        # computed 1.0 (perfectly uniform / all-distinct batch) off it by
+        # an epsilon invisible to the scores, so the stage-time decide()
+        # never recomputes the signal from a DEVICE value — which would
+        # serialize staging behind the in-flight batch (DESIGN.md §7).
+        if s.skew == 1.0:
+            owner, _ = place_np(ht.nranks, ht.nslots, k)
+            skew = ad.batch_skew(owner, ht.nranks, valid)
+            s = _rep(s, skew=skew if skew != 1.0 else 1.0 + 1e-9)
+        if s.dedup == 1.0:
+            # nudged UP: dedup < 1 would turn coalescing on (DESIGN.md
+            # §6) — every consumer clamps at 1.0, so >1 means "known
+            # all-distinct"
+            dd = ad.batch_dedup(k, valid)
+            s = _rep(s, dedup=dd if dd != 1.0 else 1.0 + 1e-9)
+    return _rep(s, pipeline_depth=max(1, int(depth)))
+
+
+def insert_async(pipe, keys, vals, *, promise=Promise.CRW,
+                 backend=Backend.AUTO, engine=None, adaptive=None,
+                 deferred=None, **kw):
+    """Submit one insert batch to a pipeline; returns a `pipeline.Handle`
+    resolving to (ok, probes) — the table threads through `pipe.state`.
+
+    Semantics (DESIGN.md §7): the batch stages immediately (eager) unless
+    its arm is an active message, in which case it waits in the deferred-
+    dispatch queue until the next dispatch point (`deferred` overrides;
+    default: explicit backend "rpc", or an AUTO peek via
+    `AdaptiveEngine.peek_arm`). Submission order is serialization order,
+    so results are bit-exact vs. calling `insert` in the same order —
+    including out-of-order `result()` forcing (tests/test_pipeline.py).
+
+    AUTO batches price arms with `stats.pipeline_depth = pipe.depth`
+    (the §7 overlap term) and compute skew/dedup host-side via `place_np`
+    so staging never blocks on a device value."""
+    backend = as_backend(backend)
+    eng = engine if engine is not None else pipe.am_engine
+    st = pipe.staged_state
+    if backend == Backend.AUTO:
+        from . import adaptive as ad
+        from .costmodel import DSOp
+        a = adaptive or ad.default_engine(st.nranks, am_engine=eng)
+        stats = _async_stats(st, keys, kw.get("valid"), kw.pop("stats", None),
+                             pipe.depth)
+        if deferred is None:
+            deferred = a.peek_arm(DSOp.HT_INSERT, promise,
+                                  a._ht_stats(keys, kw.get("valid"), stats)
+                                  ) in ("am", "am_pt")
+        kw = dict(kw, stats=stats, adaptive=a)
+    elif deferred is None:
+        deferred = backend == Backend.RPC
+
+    def op(ht):
+        ht2, ok, probes = insert(ht, keys, vals, promise=promise,
+                                 backend=backend, engine=eng, **kw)
+        return ht2, (ok, probes)
+
+    return pipe.submit(op, deferred=deferred, label="ht_insert")
+
+
+def find_async(pipe, keys, *, promise=Promise.CR, backend=Backend.AUTO,
+               engine=None, adaptive=None, deferred=None, **kw):
+    """Submit one find batch to a pipeline; returns a Handle resolving to
+    (found, vals). Same staging/deferral semantics as `insert_async`."""
+    backend = as_backend(backend)
+    eng = engine if engine is not None else pipe.am_engine
+    st = pipe.staged_state
+    if backend == Backend.AUTO:
+        from . import adaptive as ad
+        from .costmodel import DSOp
+        a = adaptive or ad.default_engine(st.nranks, am_engine=eng)
+        stats = _async_stats(st, keys, kw.get("valid"), kw.pop("stats", None),
+                             pipe.depth)
+        if deferred is None:
+            deferred = a.peek_arm(DSOp.HT_FIND, promise,
+                                  a._ht_stats(keys, kw.get("valid"), stats)
+                                  ) in ("am", "am_pt")
+        kw = dict(kw, stats=stats, adaptive=a)
+    elif deferred is None:
+        deferred = backend == Backend.RPC
+
+    def op(ht):
+        ht2, found, vals = find(ht, keys, promise=promise, backend=backend,
+                                engine=eng, **kw)
+        return ht2, (found, vals)
+
+    return pipe.submit(op, deferred=deferred, label="ht_find")

@@ -449,6 +449,24 @@ def pop_rpc(q: DQueue, engine: am_mod.AMEngine, n: int,
 # ---------------------------------------------------------------------------
 def push(q, vals, *, promise=Promise.CRW, backend=Backend.AUTO, engine=None,
          adaptive=None, **kw):
+    """Batched push onto the hosted ring buffer — paper §III-B2, any backend.
+
+    Args:
+      q:       DQueue.
+      vals:    (P, n, val_words) int32 — up to n pushes per rank per step.
+      promise: CRW (reserve+write+publish), CW (barrier-fenced), or CL
+               (host-local, zero network phases — short-circuits before any
+               backend decision; vals is (n, val_words) there).
+      backend: "auto" (default, DESIGN.md §4) / "rdma" / "rpc".
+      engine:  am.AMEngine for the RPC/AM arms.
+      adaptive: explicit AdaptiveEngine (default: cached).
+      **kw:    valid, max_cas_rounds (any backend); stats (AUTO only);
+               planned, coalesce (explicit "rdma" only — AUTO picks the
+               planned/coalesced engine per batch itself).
+
+    Returns (queue', pushed (P, n) bool). Bit-identical visible results
+    across backends (tests/test_conformance.py); tracer-safe (the hosted
+    queue's skew is `nranks` by construction, so AUTO needs no host read)."""
     if promise == Promise.CL:
         return push_local(q, vals, **kw)
     backend = as_backend(backend)
@@ -463,6 +481,11 @@ def push(q, vals, *, promise=Promise.CRW, backend=Backend.AUTO, engine=None,
 
 def pop(q, n, *, promise=Promise.CR, backend=Backend.AUTO, engine=None,
         adaptive=None, **kw):
+    """Batched pop of up to n values per rank. Backends as in `push`.
+
+    Returns (queue', got (P, n) bool, vals (P, n, val_words) int32) — vals
+    are zeros where got is False (the cross-backend contract pinned by
+    tests/test_conformance.py)."""
     if promise == Promise.CL:
         return pop_local(q, n)
     backend = as_backend(backend)
@@ -473,3 +496,75 @@ def pop(q, n, *, promise=Promise.CR, backend=Backend.AUTO, engine=None,
     if backend == Backend.RPC:
         return pop_rpc(q, engine, n, valid=kw.get("valid"))
     return pop_rdma(q, n, promise=promise, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (async) front-ends (DESIGN.md §7): submit through a
+# core/pipeline.Pipeline whose state is the DQueue. Bit-exact vs. the
+# synchronous front-ends — submission order is serialization order.
+# ---------------------------------------------------------------------------
+def _q_async_stats(stats, depth: int):
+    from dataclasses import replace as _rep
+
+    from .types import OpStats
+    return _rep(stats or OpStats(), pipeline_depth=max(1, int(depth)))
+
+
+def push_async(pipe, vals, *, promise=Promise.CRW, backend=Backend.AUTO,
+               engine=None, adaptive=None, deferred=None, **kw):
+    """Submit one push batch to a pipeline; returns a Handle resolving to
+    `pushed` — the queue threads through `pipe.state`.
+
+    AM-arm batches go through the deferred-dispatch queue and stage at the
+    next dispatch point (`deferred` overrides — see
+    `hashtable.insert_async` for the §7 semantics); AUTO batches price
+    arms with `stats.pipeline_depth = pipe.depth`. CL pushes are always
+    eager (they are local compute — there is nothing to overlap)."""
+    backend = as_backend(backend)
+    eng = engine if engine is not None else pipe.am_engine
+    q0 = pipe.staged_state
+    if promise != Promise.CL and backend == Backend.AUTO:
+        from . import adaptive as ad
+        from .costmodel import DSOp
+        a = adaptive or ad.default_engine(q0.nranks, am_engine=eng)
+        stats = _q_async_stats(kw.pop("stats", None), pipe.depth)
+        if deferred is None:
+            deferred = a.peek_arm(DSOp.Q_PUSH, promise,
+                                  a._host_stats(stats)) in ("am", "am_pt")
+        kw = dict(kw, stats=stats, adaptive=a)
+    elif deferred is None:
+        deferred = promise != Promise.CL and backend == Backend.RPC
+
+    def op(q):
+        q2, ok = push(q, vals, promise=promise, backend=backend, engine=eng,
+                      **kw)
+        return q2, ok
+
+    return pipe.submit(op, deferred=deferred, label="q_push")
+
+
+def pop_async(pipe, n, *, promise=Promise.CR, backend=Backend.AUTO,
+              engine=None, adaptive=None, deferred=None, **kw):
+    """Submit one pop batch to a pipeline; returns a Handle resolving to
+    (got, vals). Same staging/deferral semantics as `push_async`."""
+    backend = as_backend(backend)
+    eng = engine if engine is not None else pipe.am_engine
+    q0 = pipe.staged_state
+    if promise != Promise.CL and backend == Backend.AUTO:
+        from . import adaptive as ad
+        from .costmodel import DSOp
+        a = adaptive or ad.default_engine(q0.nranks, am_engine=eng)
+        stats = _q_async_stats(kw.pop("stats", None), pipe.depth)
+        if deferred is None:
+            deferred = a.peek_arm(DSOp.Q_POP, promise,
+                                  a._host_stats(stats)) in ("am", "am_pt")
+        kw = dict(kw, stats=stats, adaptive=a)
+    elif deferred is None:
+        deferred = promise != Promise.CL and backend == Backend.RPC
+
+    def op(q):
+        q2, got, vals = pop(q, n, promise=promise, backend=backend,
+                            engine=eng, **kw)
+        return q2, (got, vals)
+
+    return pipe.submit(op, deferred=deferred, label="q_pop")

@@ -210,6 +210,51 @@ def make_plan(dst: jax.Array, valid: Optional[jax.Array] = None,
                      dropped=binned.dropped, cap=cap)
 
 
+def make_plan_np(dst, valid=None, cap: Optional[int] = None,
+                 role: str = "plan") -> RoutePlan:
+    """Host-side (numpy) mirror of `make_plan` — bit-identical slot
+    assignment, computed on the Python thread instead of the device stream.
+
+    This is how the pipeline engine (core/pipeline.py, DESIGN.md §7) takes
+    plan construction off the critical path: batch *k+1*'s stable argsort
+    and slot binning run on the host while the device is still executing
+    batch *k*'s phases. The occupancy mask still crosses the network as ONE
+    `exchange` (same PLAN_EXCHANGES accounting as `make_plan` — only the
+    sort moved to the host), so phase counts are unchanged.
+
+    dst/valid must be host-concrete (numpy or non-tracer jax arrays);
+    under jit tracing use `make_plan`. Bit-equality with `make_plan` is
+    pinned by tests/test_pipeline.py.
+    """
+    import numpy as np
+    dst = np.asarray(dst)
+    nranks, n = dst.shape
+    cap = n if cap is None else cap
+    valid = (np.ones(dst.shape, dtype=bool) if valid is None
+             else np.asarray(valid).astype(bool))
+    dst_eff = np.where(valid, dst, nranks).astype(np.int32)
+    op_slot = np.zeros((nranks, n), np.int32)
+    op_ok = np.zeros((nranks, n), bool)
+    mask = np.zeros((nranks, nranks, cap), bool)
+    dropped = np.zeros((nranks,), np.int32)
+    for r in range(nranks):
+        order = np.argsort(dst_eff[r], kind="stable")
+        dst_s = dst_eff[r][order]
+        group_start = np.searchsorted(dst_s, dst_s, side="left")
+        pos = (np.arange(n) - group_start).astype(np.int32)
+        ok = (pos < cap) & (dst_s < nranks)
+        sel = ok
+        mask[r][dst_s[sel], pos[sel]] = True
+        op_slot[r][order] = pos
+        op_ok[r][order] = ok
+        dropped[r] = int(valid[r].sum()) - int(ok.sum())
+    mask_at_owner = exchange(jnp.asarray(mask), role + "_mask")
+    return RoutePlan(dst_eff=jnp.asarray(dst_eff),
+                     op_slot=jnp.asarray(op_slot),
+                     op_ok=jnp.asarray(op_ok), mask=mask_at_owner,
+                     dropped=jnp.asarray(dropped), cap=cap)
+
+
 def owner_loads(plan: RoutePlan) -> jax.Array:
     """Delivered ops per owner rank, from the plan's occupancy mask —
     the (P,) histogram behind the adaptive layer's skew statistic."""

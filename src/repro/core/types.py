@@ -102,3 +102,11 @@ class OpStats:
                                      # ships only the distinct rows, so dedup
                                      # scales the wire/owner-apply terms of the
                                      # coalesced arms.
+    pipeline_depth: int = 1          # in-flight batch windows (DESIGN.md §7):
+                                     # 1 = synchronous lock-step engine, 2 =
+                                     # double-buffered. Depth > 1 overlaps
+                                     # batch k+1's route+send with batch k's
+                                     # owner-apply+reply, so predict_arm
+                                     # prices a pipelined op at
+                                     # max(A, B) + min(A, B)/depth instead of
+                                     # A + B (A = origin-side, B = owner-side).

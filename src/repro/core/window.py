@@ -14,6 +14,19 @@ order — the analogue of NIC arrival-order serialization. The vectorized
 appliers below implement that order exactly; `kernels/amo_apply.py` is the
 TPU hot-path implementation of the same contract and `kernels/ref.py` is the
 independently written sequential oracle both are tested against.
+
+Guarantees shared by every `rdma_*` op (the public one-sided API):
+
+- tracer-safe: pure JAX on the array arguments — stage freely under
+  `jax.jit` / `vmap` / `scan` (the diagnostic phase log records at trace
+  time only, and coalescing stats degrade gracefully under tracing);
+- plan reuse (`plan=`, DESIGN.md §2) and sender-side coalescing
+  (`coalesce=True`, §6) are bit-exact vs. the plain phase — same
+  serialization positions, same visible replies, same window state;
+- reply words of invalid/undelivered ops are garbage by contract (callers
+  mask with their own valid/delivered flags — the data-structure layer
+  converts this to the zeros-when-failed contract of
+  tests/test_conformance.py); put completion is phase-end (flush model).
 """
 from __future__ import annotations
 
@@ -40,6 +53,10 @@ Array = jax.Array
 # drain it; unbounded growth would leak).
 # ---------------------------------------------------------------------------
 _CURRENT_DECISION = None
+# Pipeline slot tagging (DESIGN.md §7): core/pipeline.py wraps each staged
+# batch in `slot_scope(slot, seq)` so every routed phase is attributable to
+# the in-flight window slot that issued it.
+_CURRENT_SLOT: Optional[Tuple[int, int]] = None
 # Explicit bound on the diagnostic ring: phases beyond this are dropped
 # oldest-first (library callers on the default AUTO path never drain it).
 PHASE_LOG_MAX = 4096
@@ -57,13 +74,34 @@ def decision_scope(decision):
         _CURRENT_DECISION = prev
 
 
+@contextlib.contextmanager
+def slot_scope(slot: int, seq: int):
+    """Tag every phase issued inside the scope with its pipeline slot.
+
+    `slot` is the in-flight window slot (0 .. depth-1, double-buffered at
+    the default depth 2); `seq` is the submission sequence number of the
+    batch. Entries land in the same bounded phase log as `decision_scope`
+    with {"slot", "seq"} merged into the info dict — trace-time only, like
+    decision tagging (a jitted batch logs on its first trace)."""
+    global _CURRENT_SLOT
+    prev = _CURRENT_SLOT
+    _CURRENT_SLOT = (int(slot), int(seq))
+    try:
+        yield
+    finally:
+        _CURRENT_SLOT = prev
+
+
 def drain_phase_log() -> List[Tuple[str, object, Optional[dict]]]:
     """Return and clear the (role, decision, info) log of tagged phases.
 
-    `info` is None for uncoalesced phases; coalesced phases record the
-    sender-side combining stats {"coalesced": True, "rows_in", "rows_out",
-    "dedup_ratio"} when the batch is concrete (host-side ints; absent
-    under jit tracing, where only {"coalesced": True} is recorded)."""
+    Phases are logged while a `decision_scope` and/or a `slot_scope` is
+    active. `info` is None for plain uncoalesced phases; coalesced phases
+    record the sender-side combining stats {"coalesced": True, "rows_in",
+    "rows_out", "dedup_ratio"} when the batch is concrete (host-side ints;
+    absent under jit tracing, where only {"coalesced": True} is recorded),
+    and phases issued inside a pipeline slot additionally carry
+    {"slot": int, "seq": int} (DESIGN.md §7)."""
     out = list(_PHASE_LOG)
     _PHASE_LOG.clear()
     return out
@@ -232,13 +270,22 @@ def _default_cap(dst: Array, cap: Optional[int]) -> int:
     return dst.shape[1] if cap is None else cap
 
 
+def _phase_info(co: Optional[routing.Coalescing]) -> Optional[dict]:
+    """Info dict for one logged phase: coalescing stats + pipeline slot."""
+    info = _coalesce_info(co)
+    if _CURRENT_SLOT is not None:
+        info = dict(info or {})
+        info["slot"], info["seq"] = _CURRENT_SLOT
+    return info
+
+
 def _route_phase(dst: Array, payload: Array, cap: int,
                  valid: Optional[Array],
                  plan: Optional[routing.RoutePlan],
                  role: str,
                  co: Optional[routing.Coalescing] = None) -> routing.Routed:
-    if _CURRENT_DECISION is not None:
-        _PHASE_LOG.append((role, _CURRENT_DECISION, _coalesce_info(co)))
+    if _CURRENT_DECISION is not None or _CURRENT_SLOT is not None:
+        _PHASE_LOG.append((role, _CURRENT_DECISION, _phase_info(co)))
         if len(_PHASE_LOG) > PHASE_LOG_MAX:
             del _PHASE_LOG[:-PHASE_LOG_MAX]
     if plan is None:

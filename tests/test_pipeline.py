@@ -1,0 +1,393 @@
+"""Pipelined batch engine (DESIGN.md §7): async front-end conformance,
+deferred-AM dispatch points, host-side plan construction, the slot-tagged
+phase log, and the overlap cost model.
+
+The §7 contracts pinned here:
+  * submission order IS serialization order: async == sync == same values
+    and same final window state, on randomized interleaved submit streams
+    with out-of-order `result()` forcing, at any depth;
+  * depth=1 degenerates to the synchronous lock-step engine bit-exactly;
+  * deferred (AM-arm) batches wait for a dispatch point and drain FIFO —
+    the paper's attentiveness as an explicit queue;
+  * `routing.make_plan_np` (plan construction on the host thread) is
+    bit-identical to `make_plan`;
+  * pipelining changes the dependency structure, never the §2 exchange
+    counts, and every slot's phases are attributable via the phase log;
+  * the cost model's overlap term: T(1) == the flat sum exactly,
+    max(A,B) <= T(d) <= A+B, and owner-heavy arms (AM under poor
+    attentiveness) gain the most — the chooser can flip to AM at depth 2.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adaptive as ad_mod
+from repro.core import am as am_mod
+from repro.core import costmodel as cm
+from repro.core import hashtable as ht_mod
+from repro.core import pipeline as pl_mod
+from repro.core import queue as q_mod
+from repro.core import routing, window
+from repro.core.types import OpStats, Promise
+
+P = 4
+VW = 2
+
+
+def _mk_ht(nslots=64):
+    return ht_mod.make_hashtable(P, nslots, VW)
+
+
+def _batch(rng, n=8, dup=False):
+    if dup:
+        universe = rng.integers(1, 1 << 20, 6).astype(np.int32)
+        keys = rng.choice(universe, size=(P, n)).astype(np.int32)
+    else:
+        keys = rng.integers(1, (1 << 31) - 2, (P, n)).astype(np.int32)
+    vals = (keys[..., None] * np.arange(1, VW + 1)).astype(np.int32)
+    return jnp.asarray(keys), jnp.asarray(vals)
+
+
+# ---------------------------------------------------------------------------
+# Host-side plan construction / placement mirrors
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_make_plan_np_bitexact(seed):
+    """make_plan_np == make_plan on every RoutePlan field, including
+    capacity drops and invalid rows."""
+    rng = np.random.default_rng(seed)
+    n, cap = 10, 6   # cap < n forces capacity drops
+    dst = jnp.asarray(rng.integers(0, P, (P, n)), jnp.int32)
+    valid = jnp.asarray(rng.random((P, n)) < 0.8)
+    a = routing.make_plan(dst, valid, cap=cap)
+    b = routing.make_plan_np(np.asarray(dst), np.asarray(valid), cap=cap)
+    for field in ("dst_eff", "op_slot", "op_ok", "mask", "dropped"):
+        assert np.array_equal(np.asarray(getattr(a, field)),
+                              np.asarray(getattr(b, field))), field
+    assert a.cap == b.cap
+
+
+def test_place_np_matches_engine():
+    rng = np.random.default_rng(0)
+    ht = _mk_ht()
+    keys = rng.integers(1, (1 << 31) - 2, (P, 32)).astype(np.int32)
+    o_np, s_np = ht_mod.place_np(ht.nranks, ht.nslots, keys)
+    o_j, s_j = ht_mod._place(ht, jnp.asarray(keys))
+    assert np.array_equal(o_np, np.asarray(o_j))
+    assert np.array_equal(s_np, np.asarray(s_j))
+
+
+# ---------------------------------------------------------------------------
+# Async front-end conformance
+# ---------------------------------------------------------------------------
+def _sync_replay(ht, ops, engine=None):
+    """Run an op stream through the synchronous front-ends, in order."""
+    outs = []
+    for kind, args, kw in ops:
+        if kind == "insert":
+            ht, ok, probes = ht_mod.insert(ht, *args, engine=engine, **kw)
+            outs.append((ok, probes))
+        else:
+            ht, found, vals = ht_mod.find(ht, *args, engine=engine, **kw)
+            outs.append((found, vals))
+    return ht, outs
+
+
+def _assert_tree_equal(a, b, msg=""):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), msg
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_async_depth_bitexact_vs_sync(depth):
+    """insert_async/find_async == insert/find in submission order, at any
+    depth, including the final window state (depth-1 = lock-step)."""
+    rng = np.random.default_rng(depth)
+    ht0 = _mk_ht()
+    k1, v1 = _batch(rng)
+    k2, v2 = _batch(rng)
+    ops = [("insert", (k1, v1), {"backend": "rdma"}),
+           ("find", (k1,), {"backend": "rdma"}),
+           ("insert", (k2, v2), {"backend": "rdma", "fused": False}),
+           ("find", (k2,), {"backend": "rdma", "promise": Promise.CRW})]
+    pipe = pl_mod.Pipeline(ht0, depth=depth)
+    handles = []
+    for kind, args, kw in ops:
+        fn = ht_mod.insert_async if kind == "insert" else ht_mod.find_async
+        handles.append(fn(pipe, *args, **kw))
+    ht_sync, outs = _sync_replay(ht0, ops)
+    for h, o in zip(handles, outs):
+        _assert_tree_equal(h.result(), o, f"depth={depth} seq={h.seq}")
+    assert np.array_equal(np.asarray(pipe.flush().win.data),
+                          np.asarray(ht_sync.win.data))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_async_randomized_out_of_order_forcing(seed):
+    """Randomized interleaved submit stream (dup keys, mixed fused /
+    coalesced arms), forced in RANDOM order: every handle's value and the
+    final state match the in-order synchronous replay."""
+    rng = np.random.default_rng(seed)
+    ht0 = _mk_ht()
+    ops = []
+    for _ in range(6):
+        dup = bool(rng.integers(0, 2))
+        k, v = _batch(rng, dup=dup)
+        kw = {"backend": "rdma", "fused": bool(rng.integers(0, 2))}
+        if kw["fused"] and dup:
+            kw["coalesce"] = bool(rng.integers(0, 2))
+        if rng.integers(0, 2):
+            ops.append(("insert", (k, v), kw))
+        else:
+            ops.append(("find", (k,), kw))
+    pipe = pl_mod.Pipeline(ht0, depth=2)
+    handles = []
+    for kind, args, kw in ops:
+        fn = ht_mod.insert_async if kind == "insert" else ht_mod.find_async
+        handles.append(fn(pipe, *args, **kw))
+    ht_sync, outs = _sync_replay(ht0, ops)
+    order = rng.permutation(len(handles))
+    for i in order:
+        _assert_tree_equal(handles[i].result(), outs[i], f"op {i}")
+    # repeated result() is idempotent
+    _assert_tree_equal(handles[int(order[0])].result(), outs[int(order[0])])
+    assert np.array_equal(np.asarray(pipe.flush().win.data),
+                          np.asarray(ht_sync.win.data))
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_deferred_am_dispatch_points(depth):
+    """AM-arm submissions queue on the AMEngine and drain at the next
+    dispatch point (eager submit / result / flush); values and state match
+    the in-order synchronous replay. At depth 1 every submit completes its
+    batch — the lock-step engine is fully attentive by construction."""
+    rng = np.random.default_rng(7)
+    ht0 = _mk_ht()
+    k1, v1 = _batch(rng)
+    k2, _ = _batch(rng)
+
+    eng = am_mod.AMEngine(P)
+    ht_mod.build_am_handlers(ht0, eng)
+    pipe = pl_mod.Pipeline(ht0, depth=depth, am_engine=eng)
+    pts0 = eng.dispatch_points
+    h1 = ht_mod.insert_async(pipe, k1, v1, backend="rpc")
+    if depth == 1:
+        assert pipe.pending_deferred == 0      # submit forced it already
+        assert h1.done()
+    else:
+        assert pipe.pending_deferred == 1
+        assert not h1.done()
+    h2 = ht_mod.find_async(pipe, k1, backend="rdma")  # eager: dispatch point
+    assert pipe.pending_deferred == 0
+    assert eng.dispatch_points > pts0
+    h3 = ht_mod.find_async(pipe, k2, backend="rpc")   # stays queued (depth>1)
+    out3 = h3.result()                                # result = dispatch point
+    assert pipe.pending_deferred == 0
+
+    eng_s = am_mod.AMEngine(P)
+    ht_mod.build_am_handlers(ht0, eng_s)
+    ht_sync, outs = _sync_replay(
+        ht0, [("insert", (k1, v1), {"backend": "rpc"}),
+              ("find", (k1,), {"backend": "rdma"}),
+              ("find", (k2,), {"backend": "rpc"})], engine=eng_s)
+    _assert_tree_equal(h1.result(), outs[0])
+    _assert_tree_equal(h2.result(), outs[1])
+    _assert_tree_equal(out3, outs[2])
+    assert np.array_equal(np.asarray(pipe.flush().win.data),
+                          np.asarray(ht_sync.win.data))
+
+
+def test_queue_async_conformance():
+    rng = np.random.default_rng(3)
+    q0 = q_mod.make_queue(P, 0, 64, VW)
+    v1 = jnp.asarray(rng.integers(1, 100, (P, 6, VW)).astype(np.int32))
+    v2 = jnp.asarray(rng.integers(1, 100, (P, 6, VW)).astype(np.int32))
+    pipe = pl_mod.Pipeline(q0, depth=2)
+    h1 = q_mod.push_async(pipe, v1, backend="rdma")
+    h2 = q_mod.pop_async(pipe, 4, backend="rdma")
+    h3 = q_mod.push_async(pipe, v2, backend="rdma")
+    h4 = q_mod.pop_async(pipe, 8, backend="rdma")
+    q_s, ok1 = q_mod.push(q0, v1, backend="rdma")
+    q_s, got2, vals2 = q_mod.pop(q_s, 4, backend="rdma")
+    q_s, ok3 = q_mod.push(q_s, v2, backend="rdma")
+    q_s, got4, vals4 = q_mod.pop(q_s, 8, backend="rdma")
+    _assert_tree_equal(h4.result(), (got4, vals4))   # out of order
+    _assert_tree_equal(h1.result(), ok1)
+    _assert_tree_equal(h3.result(), ok3)
+    _assert_tree_equal(h2.result(), (got2, vals2))
+    assert np.array_equal(np.asarray(pipe.flush().win.data),
+                          np.asarray(q_s.win.data))
+
+
+def test_auto_backend_async_conforms():
+    """backend=AUTO through the pipeline (model-only decisions, depth
+    pricing on): values match a synchronous AUTO replay with its own
+    fresh chooser — the §4 conformance domain extended to §7."""
+    rng = np.random.default_rng(11)
+    ht0 = _mk_ht()
+    k1, v1 = _batch(rng)
+
+    eng = am_mod.AMEngine(P)
+    ht_mod.build_am_handlers(ht0, eng)
+    a = ad_mod.AdaptiveEngine(P, am_engine=eng)
+    pipe = pl_mod.Pipeline(ht0, depth=2, am_engine=eng)
+    h1 = ht_mod.insert_async(pipe, k1, v1, adaptive=a)
+    h2 = ht_mod.find_async(pipe, k1, adaptive=a)
+    ok, probes = h1.result()
+    found, vals = h2.result()
+    assert a.log, "AUTO submissions must log Decisions"
+    assert all(d.skew >= 1.0 for d in a.log)
+
+    eng_s = am_mod.AMEngine(P)
+    ht_mod.build_am_handlers(ht0, eng_s)
+    a_s = ad_mod.AdaptiveEngine(P, am_engine=eng_s)
+    ht_s, ok_s, _ = ht_mod.insert(ht0, k1, v1, adaptive=a_s)
+    _, found_s, vals_s = ht_mod.find(ht_s, k1, adaptive=a_s)
+    assert np.array_equal(np.asarray(ok), np.asarray(ok_s))
+    assert np.array_equal(np.asarray(found), np.asarray(found_s))
+    assert np.array_equal(np.asarray(vals), np.asarray(vals_s))
+
+
+def test_pipeline_depth_validation():
+    with pytest.raises(ValueError):
+        pl_mod.Pipeline(_mk_ht(), depth=0)
+
+
+# ---------------------------------------------------------------------------
+# Slot-tagged phase log + exchange counts
+# ---------------------------------------------------------------------------
+def test_slot_tagged_phase_log():
+    """Every phase issued inside a pipeline slot carries {slot, seq}; two
+    in-flight windows alternate slots 0/1 at depth 2 and each batch's
+    per-slot phase sequence equals the synchronous engine's."""
+    rng = np.random.default_rng(0)
+    dst = jnp.asarray(rng.integers(0, P, (P, 6)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 16, (P, 6)), jnp.int32)
+    vals = jnp.ones((P, 6, 1), jnp.int32)
+    win0 = window.make_window(P, 32)
+
+    def op(w):
+        w2 = window.rdma_put(w, dst, off, vals)
+        out = window.rdma_get(w2, dst, off, 1)
+        return w2, out
+
+    window.drain_phase_log()
+    pipe = pl_mod.Pipeline(win0, depth=2)
+    pipe.submit(op)
+    pipe.submit(op)
+    pipe.flush()
+    log = window.drain_phase_log()
+    tags = [(role, info["slot"], info["seq"]) for role, _, info in log]
+    assert tags == [("put", 0, 0), ("get", 0, 0),
+                    ("put", 1, 1), ("get", 1, 1)]
+
+
+def test_pipelining_adds_zero_exchanges():
+    """The §2/§7 invariant: a depth-2 stream issues exactly the exchanges
+    of the same batches run synchronously — overlap changes the dependency
+    structure, never the phase count."""
+    rng = np.random.default_rng(1)
+    dst = jnp.asarray(rng.integers(0, P, (P, 6)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 16, (P, 6)), jnp.int32)
+    vals = jnp.ones((P, 6, 1), jnp.int32)
+    win0 = window.make_window(P, 32)
+
+    roles = []
+
+    def hook(x, role):
+        if role.endswith("_pre"):
+            roles.append(role[:-4])
+        return x
+
+    def op(w):
+        w2 = window.rdma_put(w, dst, off, vals)
+        return w2, window.rdma_get(w2, dst, off, 1)
+
+    with routing.sharding_hook(hook):
+        w = win0
+        for _ in range(2):
+            w, out = op(w)
+        jax.block_until_ready((w, out))
+    sync_roles = list(roles)
+
+    roles.clear()
+    with routing.sharding_hook(hook):
+        pipe = pl_mod.Pipeline(win0, depth=2)
+        pipe.submit(op)
+        pipe.submit(op)
+        pipe.flush()
+    assert roles == sync_roles
+
+
+# ---------------------------------------------------------------------------
+# Overlap cost model (§7)
+# ---------------------------------------------------------------------------
+ALL_OPS = [(cm.DSOp.HT_INSERT, Promise.CRW), (cm.DSOp.HT_FIND, Promise.CR),
+           (cm.DSOp.HT_FIND, Promise.CRW), (cm.DSOp.Q_PUSH, Promise.CRW),
+           (cm.DSOp.Q_POP, Promise.CR)]
+
+
+@pytest.mark.parametrize("op,promise", ALL_OPS)
+@pytest.mark.parametrize("arm", cm.ARMS)
+def test_overlap_split_sums_to_flat(op, promise, arm):
+    s = OpStats(skew=3.0, dedup=0.5, target_busy_us=5.0)
+    for params in (cm.CORI_PHASE1, cm.TPU_V5E_ICI):
+        flat = cm._predict_arm_flat(op, promise, arm, s, params)
+        a, b = cm.overlap_split(op, promise, arm, s, params)
+        assert a >= 0 and b >= 0
+        assert abs((a + b) - flat) < 1e-9
+        # depth-1 degenerates exactly; deeper pipelines are bounded by
+        # [max(A,B), A+B] and monotone non-increasing in depth
+        assert abs(cm.predict_pipelined(op, promise, arm, s, params,
+                                        depth=1) - flat) < 1e-9
+        prev = flat
+        for d in (2, 3, 8):
+            t = cm.predict_pipelined(op, promise, arm, s, params, depth=d)
+            assert max(a, b) - 1e-9 <= t <= prev + 1e-9
+            prev = t
+
+
+def test_predict_arm_reads_depth_from_stats():
+    s1 = OpStats(skew=4.0, target_busy_us=10.0)
+    s2 = OpStats(skew=4.0, target_busy_us=10.0, pipeline_depth=2)
+    flat = cm.predict_arm(cm.DSOp.HT_INSERT, Promise.CRW, "am", s1,
+                          cm.TPU_V5E_ICI)
+    piped = cm.predict_arm(cm.DSOp.HT_INSERT, Promise.CRW, "am", s2,
+                           cm.TPU_V5E_ICI)
+    assert piped < flat   # attentiveness + handler latency get hidden
+    assert abs(piped - cm.predict_pipelined(
+        cm.DSOp.HT_INSERT, Promise.CRW, "am", s2, cm.TPU_V5E_ICI)) < 1e-12
+
+
+def test_overlap_flips_chooser_to_am():
+    """The §7 headline: an owner-heavy AM arm (big attentiveness wait,
+    handler work) loses to fused RDMA lock-step but wins once depth-2
+    overlap hides its owner-side latency behind the next batch's
+    route+send."""
+    p = cm.ComponentCosts(W=1, R=2, A_cas=2.3, A_fao=2.3, am_rt=6.0,
+                          handler=0.5, amo_apply=1.0)
+    flat = OpStats(skew=8.0, target_busy_us=4.0)
+    piped = OpStats(skew=8.0, target_busy_us=4.0, pipeline_depth=2)
+    args = (cm.DSOp.HT_INSERT, Promise.CRW)
+    r1 = cm.predict_arm(*args, "rdma_fused", flat, p)
+    a1 = cm.predict_arm(*args, "am", flat, p)
+    r2 = cm.predict_arm(*args, "rdma_fused", piped, p)
+    a2 = cm.predict_arm(*args, "am", piped, p)
+    assert r1 < a1, "lock-step should prefer fused RDMA here"
+    assert a2 < r2, "depth-2 overlap should flip the choice to AM"
+
+
+def test_peek_arm_matches_decide_without_logging():
+    a = ad_mod.AdaptiveEngine(P)   # one-sided arms only, model scores
+    s = OpStats(skew=2.0, pipeline_depth=2)
+    peeked = a.peek_arm(cm.DSOp.HT_INSERT, Promise.CRW, s)
+    assert not a.log
+    dec = a.decide(cm.DSOp.HT_INSERT, Promise.CRW, stats=s)
+    assert dec.arm == peeked
+    assert len(a.log) == 1
+    a.force_arm = "rdma"
+    assert a.peek_arm(cm.DSOp.HT_INSERT, Promise.CRW, s) == "rdma"
