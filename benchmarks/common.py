@@ -109,10 +109,21 @@ def keys_for_targets(targets: np.ndarray, nranks: int,
 
 
 def gen_batch_keys(P: int, n: int, scenario: str, rng: np.random.Generator,
-                   used: Optional[Set[int]] = None) -> np.ndarray:
-    """One (P, n) batch of distinct keys following a skew scenario."""
-    return keys_for_targets(gen_owner_targets(P, n, scenario, rng), P, rng,
+                   used: Optional[Set[int]] = None, *,
+                   read_frac: Optional[float] = None):
+    """One (P, n) batch of distinct keys following a skew scenario.
+
+    read_frac=None (default) returns just the keys. read_frac=f also
+    returns a (P, n) bool mask marking ~f of the rows as READS — the
+    mixed read/write stream generator the cache-tier bench (DESIGN.md §8)
+    uses to split one batch into a find subset (mask True) and an insert
+    subset (mask False)."""
+    keys = keys_for_targets(gen_owner_targets(P, n, scenario, rng), P, rng,
                             used)
+    if read_frac is None:
+        return keys
+    reads = rng.random((P, n)) < float(read_frac)
+    return keys, reads
 
 
 def gen_zipf_dup_keys(P: int, n: int, rng: np.random.Generator,

@@ -92,6 +92,13 @@ def collect() -> dict:
                 "dedup_ratio": co.get("dedup_ratio"),
                 "us_coalesced": co.get("ht_hot_insert_find_coalesced"),
             }
+        ca = comp.get("cache", {}).get("8")
+        if ca:
+            entry["components"]["cache"] = {
+                "speedup": ca.get("cache_speedup"),
+                "hit_rate": ca.get("hit_rate"),
+                "us_cached": ca.get("ht_read_heavy_find_cached"),
+            }
 
     pl = _load("BENCH_pipeline.json")
     if pl:

@@ -14,7 +14,11 @@
 # 4. pipeline smoke: depth-2 overlap >= 1.25x over depth-1 on the P=8
 #    insert+find mix (DESIGN.md §7), refreshing
 #    artifacts/bench/BENCH_pipeline.json.
-# 5. docs check: README exists, DESIGN §-references and README paths
+# 5. cache-tier smoke: read-heavy zipfian find >= 5x over the
+#    fused+coalesced path with >= 0.9 hit rate, zero-exchange steady
+#    state, and bit-exact results (DESIGN.md §8), refreshing the cache
+#    row of artifacts/bench/BENCH_components.json.
+# 6. docs check: README exists, DESIGN §-references and README paths
 #    resolve, examples/ compiles (scripts/check_docs.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -40,6 +44,9 @@ python -m benchmarks.attentiveness --smoke
 
 echo "== pipeline overlap smoke (DESIGN.md §7, depth-2 >= 1.25x) =="
 python -m benchmarks.pipeline_bench --smoke
+
+echo "== cache-tier smoke (DESIGN.md §8, read-heavy find >= 5x) =="
+python -m benchmarks.components --smoke-cache
 
 echo "== docs check (README / DESIGN references, examples compile) =="
 python scripts/check_docs.py

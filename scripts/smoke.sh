@@ -3,6 +3,7 @@
 #
 #   scripts/smoke.sh                    # from anywhere: the full smoke
 #   scripts/smoke.sh --smoke-pipeline   # ONLY the §7 pipeline overlap gate
+#   scripts/smoke.sh --smoke-cache      # ONLY the §8 cache-tier gate
 #
 # 1. tier-1: the full pytest suite, compared against the known
 #    pre-existing failure set (scripts/known_failures.txt — jax-version
@@ -19,6 +20,11 @@
 # 5. pipeline overlap gate (DESIGN.md §7): depth-2 >= 1.25x over depth-1
 #    on the P=8 insert+find mix -> artifacts/bench/BENCH_pipeline.json.
 #
+# 6. cache-tier gate (DESIGN.md §8, after the JSON artifact refresh it
+#    amends): read-heavy zipfian find, hot-bucket cache vs the
+#    fused+coalesced path — >= 5x median find-batch speedup, hit rate
+#    >= 0.9, zero exchanges on a steady-state batch, bit-exact results.
+#
 # scripts/ci.sh is the CI-facing gate (tier-1 + adaptive + attentiveness
 # + pipeline + docs check).
 set -euo pipefail
@@ -30,6 +36,13 @@ if [[ "${1:-}" == "--smoke-pipeline" ]]; then
   echo "== pipeline overlap gate only (DESIGN.md §7) =="
   python -m benchmarks.pipeline_bench --smoke
   echo "smoke-pipeline OK"
+  exit 0
+fi
+
+if [[ "${1:-}" == "--smoke-cache" ]]; then
+  echo "== cache-tier gate only (DESIGN.md §8) =="
+  python -m benchmarks.components --smoke-cache
+  echo "smoke-cache OK"
   exit 0
 fi
 
@@ -59,5 +72,10 @@ python -m benchmarks.components --smoke-coalesce
 
 echo "== pipeline overlap gate (DESIGN.md §7, depth-2 >= 1.25x) =="
 python -m benchmarks.pipeline_bench --smoke
+
+echo "== cache-tier gate (DESIGN.md §8, read-heavy find >= 5x) =="
+# runs the workload ONCE: gates speedup + hit rate + zero-exchange
+# steady state + bit-exactness, then folds its row into the JSON artifact
+python -m benchmarks.components --smoke-cache
 
 echo "smoke OK"

@@ -71,6 +71,10 @@ class Decision:
                                   # < 1 turns sender-side coalescing on for
                                   # the fused/AM arms (DESIGN.md §6)
     coalesce: bool = False        # the executed arm ran with coalescing
+    cached: bool = False          # the executed arm consulted the
+                                  # hot-bucket cache (DESIGN.md §8)
+    hit_rate: float = 0.0         # hit-rate EWMA the scores were priced
+                                  # with (the fourth online signal)
 
 
 def _concrete(x) -> Optional[np.ndarray]:
@@ -137,13 +141,28 @@ class AdaptiveEngine:
                 been refreshed for this many decisions of the same op —
                 bounded-cost exploration that prevents a single bad
                 measurement from starving an arm forever.
+    cache:      optional core/cache.BucketCache (DESIGN.md §8). Explicit
+                opt-in, NEVER auto-created: the default engines are shared
+                per-nranks across every table, and a cache is coherent for
+                exactly one table (its writes flow through this engine's
+                `ht_insert`). When attached, CR finds on the fused
+                one-sided arm consult it, the observed hit rate feeds a
+                fourth online signal (`hit_ewma`, priced via
+                OpStats.hit_rate), and a write-fraction EWMA
+                (`write_ewma`) disables cache READS under write-heavy
+                streams — invalidation always stays on (correctness).
     """
+
+    #: write-fraction EWMA above which cache reads are suspended: at ≥50%
+    #: writes the probe-window invalidations churn faster than fills
+    #: repopulate, so the lookup is pure overhead.
+    WRITE_HEAVY = 0.5
 
     def __init__(self, nranks: int, am_engine=None,
                  params: ComponentCosts = cm.TPU_V5E_ICI,
                  alpha: float = 0.25, arms: Optional[Tuple[str, ...]] = None,
                  policy: str = "cost", measure: bool = False,
-                 explore_every: int = 0):
+                 explore_every: int = 0, cache=None):
         if arms is None:
             arms = ARMS if am_engine is not None else ("rdma", "rdma_fused")
         for a in arms:
@@ -162,6 +181,9 @@ class AdaptiveEngine:
         self.measure = measure
         self.explore_every = explore_every
         self.force_arm: Optional[str] = None
+        self.cache = cache
+        self.hit_ewma = 0.0    # observed cache hit rate (4th online signal)
+        self.write_ewma = 0.0  # observed write fraction of the op stream
         self.ewma: Dict[Tuple[DSOp, str], float] = {}
         # bounded ring: the default AUTO front-ends log every batch here
         # and nothing drains it
@@ -185,6 +207,22 @@ class AdaptiveEngine:
         self.ewma[key] = (us_per_op if prev is None
                           else prev + self.alpha * (us_per_op - prev))
         self._seen[key] = self._op_count.get(decision.op, 0)
+
+    def attach_cache(self, cache) -> None:
+        """Attach a hot-bucket cache (DESIGN.md §8). One cache per table:
+        coherence holds only for writes issued through THIS engine."""
+        self.cache = cache
+
+    def cache_reads_on(self) -> bool:
+        """Whether CR finds should consult the cache right now: one is
+        attached, enabled, and the stream is not write-heavy (the chooser
+        disables reads — not invalidation — past WRITE_HEAVY, where the
+        probe-window version churn outruns the fills)."""
+        return (self.cache is not None and self.cache.enabled
+                and self.write_ewma < self.WRITE_HEAVY)
+
+    def _observe_rw(self, is_write: bool) -> None:
+        self.write_ewma += self.alpha * (float(is_write) - self.write_ewma)
 
     # -- decision -----------------------------------------------------------
     def scores(self, op: DSOp, promise: Promise,
@@ -280,7 +318,10 @@ class AdaptiveEngine:
         dec = Decision(op=op, promise=promise, arm=arm, skew=skew,
                        scores=scores, source=source, batch_ops=nops,
                        dedup=dedup,
-                       coalesce=cm.arm_coalesces(op, arm, dedup))
+                       coalesce=cm.arm_coalesces(op, arm, dedup),
+                       cached=(self.cache_reads_on()
+                               and cm.arm_caches(op, promise, arm)),
+                       hit_rate=s.hit_rate)
         self.log.append(dec)
         self.last_decision = dec
         return dec
@@ -337,12 +378,20 @@ class AdaptiveEngine:
         The skew statistic reads the batch's owner placement on the host
         (one device read per batch); pre-set `stats.skew` to skip it.
         Duplicate-key batches (dedup < 1) run the fused/AM arms with
-        sender-side coalescing on."""
+        sender-side coalescing on. With a cache attached (DESIGN.md §8)
+        every insert — ANY arm, the AM insert-or-assign included — bumps
+        the probe-window versions of its keys BEFORE executing, so stale
+        cached records can never be served after this call returns."""
         from . import hashtable as ht_mod
         from . import window as win_mod
         dst, _ = ht_mod._place(ht, keys)
         dec = self.decide(DSOp.HT_INSERT, promise, dst, valid,
                           self._ht_stats(keys, valid, stats))
+        self._observe_rw(is_write=True)
+        if self.cache is not None:
+            # authoritative invalidation: versions bump before any write
+            # lands, so a racing deferred fill tick-mismatches and drops
+            self.cache.on_insert_keys(keys, valid, max_probes)
         if dec.arm in ("am", "am_pt"):
             eng = self._need_am(
                 "ht_insert",
@@ -353,7 +402,8 @@ class AdaptiveEngine:
                 coalesce=dec.coalesce))
 
         def run():
-            with win_mod.decision_scope(dec):
+            with win_mod.decision_scope(dec), \
+                    win_mod.cache_scope(self.cache):
                 return ht_mod.insert_rdma(
                     ht, keys, vals, promise=promise, valid=valid,
                     max_probes=max_probes, fused=dec.arm == "rdma_fused",
@@ -363,12 +413,22 @@ class AdaptiveEngine:
     def ht_find(self, ht, keys, promise: Promise = Promise.CR,
                 valid=None, max_probes: int = 8,
                 stats: Optional[OpStats] = None):
-        """Adaptive hash-table find: returns (table', found, vals)."""
+        """Adaptive hash-table find: returns (table', found, vals).
+
+        With a cache attached and reads on (see `cache_reads_on`), the
+        hit-rate EWMA is folded into the stats (OpStats.hit_rate — the
+        fourth online signal) so the chooser prices the cached fused arm
+        with the §8 discount, and the executed CR fused find consults the
+        cache; the batch's observed hit rate then refreshes the EWMA."""
         from . import hashtable as ht_mod
         from . import window as win_mod
         dst, _ = ht_mod._place(ht, keys)
-        dec = self.decide(DSOp.HT_FIND, promise, dst, valid,
-                          self._ht_stats(keys, valid, stats))
+        s = self._ht_stats(keys, valid, stats)
+        reads_cached = (self.cache_reads_on() and promise == Promise.CR)
+        if reads_cached and s.hit_rate == 0.0:
+            s = replace(s, hit_rate=self.hit_ewma)
+        dec = self.decide(DSOp.HT_FIND, promise, dst, valid, s)
+        self._observe_rw(is_write=False)
         if dec.arm in ("am", "am_pt"):
             eng = self._need_am(
                 "ht_find",
@@ -384,8 +444,13 @@ class AdaptiveEngine:
                 return ht_mod.find_rdma(
                     ht, keys, promise=promise, valid=valid,
                     max_probes=max_probes, fused=dec.arm == "rdma_fused",
-                    coalesce=dec.coalesce)
-        return self._timed(dec, run)
+                    coalesce=dec.coalesce,
+                    cache=self.cache if dec.cached else None)
+        out = self._timed(dec, run)
+        if dec.cached and self.cache.last_hit_rate is not None:
+            self.hit_ewma += self.alpha * (self.cache.last_hit_rate
+                                           - self.hit_ewma)
+        return out
 
     def q_push(self, q, vals, promise: Promise = Promise.CRW, valid=None,
                max_cas_rounds: int = 8, stats: Optional[OpStats] = None):

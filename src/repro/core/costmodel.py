@@ -41,6 +41,18 @@ class ComponentCosts:
                                 # (duplicate-run lexsort + reply fan-out,
                                 # DESIGN.md §6) — paid whether or not the
                                 # batch actually contains duplicates
+    cache_lookup: float = 0.15  # hot-bucket cache consult per op (DESIGN.md
+                                # §8): the host-side tag+version check every
+                                # cached-arm op pays, hit or miss
+    pipe_depth_overhead: float = 0.0
+                                # per-op penalty for each pipeline window
+                                # beyond PIPELINE_STAGES (DESIGN.md §7): the
+                                # engine has two stages, so depth > 2 adds
+                                # queueing/host-scheduling overhead instead
+                                # of overlap (the measured depth-4
+                                # regression in BENCH_trajectory.json).
+                                # 0.0 = pure saturation; calibrate() sets
+                                # the measured slope.
     # Fused component phases (None -> derived: the compound descriptor rides
     # the atomic's two exchanges, so a fused op costs its atomic; the saved
     # W / R / A_fao phases are the win). calibrate() overrides with measured
@@ -111,7 +123,8 @@ def _rpc_cost(c: ComponentCosts, stats: OpStats) -> float:
 def predict(op: DSOp, promise: Promise, backend: Backend,
             stats: Optional[OpStats] = None,
             params: ComponentCosts = CORI_PHASE1,
-            fused: bool = False, coalesce: bool = False) -> float:
+            fused: bool = False, coalesce: bool = False,
+            cached: bool = False) -> float:
     """Best-case per-op latency (µs) — the paper's Tables II/III formulas.
 
     fused=True prices the fused-descriptor engine (DESIGN.md §2): the
@@ -126,12 +139,30 @@ def predict(op: DSOp, promise: Promise, backend: Backend,
     skew. Every op additionally pays the sender-side `combine` overhead.
     rho = 1 (all-distinct traffic) degrades to the uncoalesced formula
     plus the combine overhead — which is why the chooser only coalesces
-    when the observed dedup ratio is < 1."""
+    when the observed dedup ratio is < 1.
+
+    cached=True prices the hot-bucket cache tier (DESIGN.md §8) on the
+    one-sided find: every op pays the host-side `cache_lookup`, the hit
+    fraction (stats.hit_rate) pays NOTHING else — a hit issues zero
+    exchanges — and only the miss fraction pays the wire formula (over
+    which the coalesce discount still applies, since the miss subset
+    feeds the coalesced plan). hit_rate = 0 degrades to the uncached
+    formula plus the lookup overhead, which is why the chooser only
+    prices the cached arm when a cache is attached and warm."""
     s = stats or OpStats()
     c = params
     if backend == Backend.AUTO:
         raise ValueError("predict() needs a concrete backend; "
                          "use choose_backend() first")
+    if cached:
+        if not (op == DSOp.HT_FIND and promise == Promise.CR
+                and backend == Backend.RDMA):
+            raise ValueError("cached pricing only applies to the "
+                             "one-sided CR find (DESIGN.md §8)")
+        hr = min(1.0, max(0.0, float(s.hit_rate)))
+        base = predict(op, promise, backend, s, params, fused=fused,
+                       coalesce=coalesce, cached=False)
+        return c.cache_lookup + (1.0 - hr) * base
     if backend == Backend.RPC:
         if coalesce:
             rho = min(1.0, max(float(s.dedup), 1e-3))
@@ -295,6 +326,20 @@ def arm_coalesces(op: DSOp, arm: str, dedup: float) -> bool:
     return True
 
 
+def arm_caches(op: DSOp, promise: Promise, arm: str) -> bool:
+    """Whether `arm` consults the hot-bucket cache (DESIGN.md §8) for this
+    op — the single rule shared by the pricer (`predict_arm`) and the
+    executor (adaptive.decide), mirroring `arm_coalesces`.
+
+    Only the planned+fused one-sided find at the bare-read promise caches:
+    CR is the only promise whose reply is a plain published record (CRW's
+    read locks must hit the owner every time), and the seed `rdma` arm
+    stays the uncombined, uncached baseline. The AM arms never cache —
+    the handler round trip IS their aggregation story."""
+    return (op == DSOp.HT_FIND and promise == Promise.CR
+            and arm == "rdma_fused")
+
+
 def _predict_arm_flat(op: DSOp, promise: Promise, arm: str, s: OpStats,
                       params: ComponentCosts) -> float:
     """Un-pipelined (lock-step) per-op latency of one arm — the sum of its
@@ -304,8 +349,9 @@ def _predict_arm_flat(op: DSOp, promise: Promise, arm: str, s: OpStats,
     if arm == "rdma":
         return predict(op, promise, Backend.RDMA, s, params, fused=False)
     if arm == "rdma_fused":
+        ca = s.hit_rate > 0.0 and arm_caches(op, promise, arm)
         return predict(op, promise, Backend.RDMA, s, params, fused=True,
-                       coalesce=co)
+                       coalesce=co, cached=ca)
     if arm == "am":
         return predict(op, promise, Backend.RPC,
                        replace(s, progress_thread=False), params,
@@ -348,6 +394,16 @@ def overlap_split(op: DSOp, promise: Promise, arm: str,
     return origin, total - origin
 
 
+# The engine (core/pipeline.py) is a TWO-stage pipeline: host staging
+# (route/coalesce/plan on the Python thread) and device apply. Two in-flight
+# windows already achieve all the overlap the structure admits; extra depth
+# only lengthens the submission queue. The measured trajectory agrees —
+# per-batch medians saturate at depth 2 and REGRESS at depth 4 (~7% in
+# BENCH_trajectory.json: 18.2 ms -> 19.5 ms), the regression being host
+# scheduling/retirement overhead for the extra queued windows.
+PIPELINE_STAGES = 2
+
+
 def predict_pipelined(op: DSOp, promise: Promise, arm: str,
                       stats: Optional[OpStats] = None,
                       params: ComponentCosts = CORI_PHASE1,
@@ -355,17 +411,23 @@ def predict_pipelined(op: DSOp, promise: Promise, arm: str,
     """Steady-state per-batch latency of one arm at pipeline depth d
     (DESIGN.md §7):
 
-        T(d) = max(A, B) + min(A, B) / d
+        T(d) = max(A, B) + min(A, B) / min(d, S)
+                 + max(0, d - S) * pipe_depth_overhead,   S = PIPELINE_STAGES
 
     with (A, B) = `overlap_split` — a two-stage pipeline keeps d windows
     in flight, so the shorter stage hides behind the longer one except for
-    the 1/d un-overlapped residue. d = 1 degenerates EXACTLY to the flat
-    sum A + B (the synchronous engine); d → ∞ approaches the max (perfect
-    overlap). `depth` defaults to stats.pipeline_depth."""
+    the un-overlapped residue. d = 1 degenerates EXACTLY to the flat sum
+    A + B (the synchronous engine). The overlap term SATURATES at
+    S = PIPELINE_STAGES: the engine has two stages, so no overlap beyond
+    double-buffering exists to win, and each extra queued window costs the
+    measured per-depth `pipe_depth_overhead` (0 by default; calibrate()
+    sets the slope fitted from the depth sweep). `depth` defaults to
+    stats.pipeline_depth."""
     s = stats or OpStats()
     d = max(1, int(s.pipeline_depth if depth is None else depth))
     a, b = overlap_split(op, promise, arm, s, params)
-    return max(a, b) + min(a, b) / d
+    t = max(a, b) + min(a, b) / min(d, PIPELINE_STAGES)
+    return t + max(0, d - PIPELINE_STAGES) * params.pipe_depth_overhead
 
 
 def predict_arm(op: DSOp, promise: Promise, arm: str,
@@ -402,7 +464,8 @@ def calibrate(measured: Dict[str, float],
     """Build a parameter set from measured component latencies (µs).
 
     Keys: any of W, R, A_cas, A_fao, am_rt, handler, local, amo_apply,
-    A_cas_put, A_cas_put_pub, A_fao_get.
+    A_cas_put, A_cas_put_pub, A_fao_get, combine, cache_lookup,
+    pipe_depth_overhead.
     """
     fields = {k: v for k, v in measured.items()
               if k in ComponentCosts.__dataclass_fields__}

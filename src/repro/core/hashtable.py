@@ -229,8 +229,8 @@ def insert_rdma(ht: DHashTable, keys: Array, vals: Array,
 def find_rdma(ht: DHashTable, keys: Array,
               promise: Promise = Promise.CR,
               valid: Optional[Array] = None, max_probes: int = 8,
-              fused: bool = True, coalesce: bool = False
-              ) -> Tuple[DHashTable, Array, Array]:
+              fused: bool = True, coalesce: bool = False,
+              cache=None) -> Tuple[DHashTable, Array, Array]:
     """Batched find. Returns (table', found (P,n), vals (P,n,vw)).
 
     C_R : one bare get per probe (flag+key+val in a single R).
@@ -249,18 +249,45 @@ def find_rdma(ht: DHashTable, keys: Array,
     continue) identically, and for C_RW the combined read-lock carries the
     summed reader units whose per-op fetched values are reconstructed
     sender-side.
-    """
+
+    cache (DESIGN.md §8): an optional core/cache.BucketCache consulted
+    BEFORE planning — only for the fused CR find (CRW must hit the owner
+    for its read locks) on concrete batches (cache.lookup returns None
+    under jit tracing). Cache hits are answered origin-locally: an
+    all-hit batch issues ZERO exchanges, a mixed batch plans only the
+    miss subset (bit-identical occupancy, `routing.miss_subset_plan`)
+    and the probe loop's fresh results are fed back via
+    `cache.note_fill`. Bit-exact by the version protocol: a fresh entry
+    is exactly the record the wire would return."""
     assert promise in (Promise.CRW, Promise.CR)
     if valid is None:
         valid = jnp.ones(keys.shape, dtype=bool)
     dst, start = _place(ht, keys)
     rec_w, nslots, vw = ht.rec_w, ht.nslots, ht.val_words
+    look = None
+    if cache is not None and fused and promise == Promise.CR:
+        look = cache.lookup(keys, valid)
+    if look is not None and look.all_hit:
+        # every valid row served origin-locally: ZERO exchanges
+        win_mod.log_cache_event("cache_hit", {
+            "hits": int(look.hit.sum()), "misses": 0, "all_hit": True})
+        return ht, jnp.asarray(look.hit), jnp.asarray(look.vals)
+    eff_valid = valid
+    if look is not None:
+        eff_valid = valid & jnp.asarray(~look.hit)
     if fused and coalesce:
-        plan = routing.coalesce_plan(dst, start, match=keys[..., None],
-                                     valid=valid, cap=keys.shape[1],
-                                     role="ht_find")
+        if look is not None:
+            plan = routing.miss_subset_plan(dst, start,
+                                            jnp.asarray(look.hit),
+                                            match=keys[..., None],
+                                            valid=valid, cap=keys.shape[1],
+                                            role="ht_find")
+        else:
+            plan = routing.coalesce_plan(dst, start, match=keys[..., None],
+                                         valid=valid, cap=keys.shape[1],
+                                         role="ht_find")
     elif fused:
-        plan = routing.make_plan(dst, valid, cap=keys.shape[1],
+        plan = routing.make_plan(dst, eff_valid, cap=keys.shape[1],
                                  role="ht_find")
     else:
         plan = None
@@ -304,14 +331,38 @@ def find_rdma(ht: DHashTable, keys: Array,
     if fused:
         # Adaptive termination (see insert_rdma): an all-inactive probe is
         # an identity, so stopping when every op resolved is bit-exact.
+        # With a cache in play the carry additionally tracks each hit's
+        # slot (the fill needs it to stamp versions); the cache-free trace
+        # is untouched.
+        track = look is not None
+
         def probe_fused(carry):
-            j, win, active, found, out = carry
+            if track:
+                j, win, active, found, out, hslot = carry
+            else:
+                j, win, active, found, out = carry
+            prev_found = found
             win, active, found, out = probe_body(j, win, active, found, out)
+            if track:
+                slot = (start + j) % nslots
+                hslot = jnp.where(found & ~prev_found, slot, hslot)
+                return j + 1, win, active, found, out, hslot
             return j + 1, win, active, found, out
 
-        _, win, _, found, out = jax.lax.while_loop(
-            lambda c: (c[0] < max_probes) & c[2].any(), probe_fused,
-            (jnp.int32(0), ht.win, valid, found0, out0))
+        carry0 = (jnp.int32(0), ht.win, eff_valid, found0, out0)
+        if track:
+            carry0 = carry0 + (jnp.full(keys.shape, -1, jnp.int32),)
+        fin = jax.lax.while_loop(
+            lambda c: (c[0] < max_probes) & c[2].any(), probe_fused, carry0)
+        win, found, out = fin[1], fin[3], fin[4]
+        if track:
+            hitm = jnp.asarray(look.hit)
+            found = found | hitm
+            out = jnp.where(hitm[..., None], jnp.asarray(look.vals), out)
+            cache.note_fill(look, fin[5], found, out)
+            win_mod.log_cache_event("cache_hit", {
+                "hits": int(look.hit.sum()),
+                "misses": int(look.miss.sum())})
     else:
         win, _, found, out = jax.lax.fori_loop(
             0, max_probes,

@@ -557,6 +557,29 @@ def coalesce_plan(dst: jax.Array, off: jax.Array,
     return CoalescedPlan(plan=plan, co=co)
 
 
+def miss_subset_plan(dst: jax.Array, off: jax.Array, hit: Optional[jax.Array],
+                     match: Optional[jax.Array] = None,
+                     valid: Optional[jax.Array] = None,
+                     cap: Optional[int] = None,
+                     role: str = "plan") -> CoalescedPlan:
+    """`coalesce_plan` restricted to the cache-miss subset (DESIGN.md §8).
+
+    `hit` is the origin-local hot-bucket cache's hit mask for the batch
+    (None = no cache consulted — degenerates to `coalesce_plan` exactly).
+    Cache hits are carved out of the plan's validity BEFORE the occupancy
+    exchange, so the wire and owner lanes see only the misses; because
+    `make_plan` shapes its occupancy by the valid mask, the resulting plan
+    is bit-identical to one built for a batch that never contained the hit
+    rows. Still ONE occupancy exchange; all-hit batches should skip the
+    plan entirely (zero exchanges) — the caller's job, since building any
+    plan costs the occupancy exchange."""
+    if hit is not None:
+        hit = jnp.asarray(hit)
+        valid = ~hit if valid is None else (jnp.asarray(valid) & ~hit)
+    return coalesce_plan(dst, off, match=match, valid=valid, cap=cap,
+                         role=role)
+
+
 def flatten_owner_view(routed: Routed):
     """Flatten an owner's (P_src, cap) request grid into a serialized op list.
 

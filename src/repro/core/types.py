@@ -110,3 +110,10 @@ class OpStats:
                                      # prices a pipelined op at
                                      # max(A, B) + min(A, B)/depth instead of
                                      # A + B (A = origin-side, B = owner-side).
+    hit_rate: float = 0.0            # hot-bucket cache hit fraction
+                                     # (DESIGN.md §8): fraction of a find
+                                     # batch expected to be served from the
+                                     # origin-local bucket cache, paying only
+                                     # the host lookup. Only the cached find
+                                     # arm (rdma_fused under CR) consults it;
+                                     # 0.0 = no cache attached.

@@ -57,6 +57,11 @@ _CURRENT_DECISION = None
 # batch in `slot_scope(slot, seq)` so every routed phase is attributable to
 # the in-flight window slot that issued it.
 _CURRENT_SLOT: Optional[Tuple[int, int]] = None
+# Hot-bucket cache tagging (DESIGN.md §8): the adaptive layer wraps cached
+# table ops in `cache_scope(cache)`; publish-capable phases notify the
+# active cache of concrete publish flips (precision invalidation) and the
+# cache logs fill/invalidate events into the same phase log.
+_CURRENT_CACHE = None
 # Explicit bound on the diagnostic ring: phases beyond this are dropped
 # oldest-first (library callers on the default AUTO path never drain it).
 PHASE_LOG_MAX = 4096
@@ -90,6 +95,48 @@ def slot_scope(slot: int, seq: int):
         yield
     finally:
         _CURRENT_SLOT = prev
+
+
+@contextlib.contextmanager
+def cache_scope(cache):
+    """Make `cache` (core/cache.BucketCache) the active hot-bucket cache.
+
+    Inside the scope, publish-capable phases (`rdma_cas_put_publish`,
+    `rdma_cas_put`, FXOR `rdma_fao`) forward concrete (dst, off) flips to
+    `cache.on_publish` — the precision invalidation channel; the cache
+    itself logs cache_fill / cache_hit / cache_invalidate events into the
+    phase log via `log_cache_event`. Cache hits issue NO phases — the
+    zero-exchange property tests/test_cache.py pins."""
+    global _CURRENT_CACHE
+    prev = _CURRENT_CACHE
+    _CURRENT_CACHE = cache
+    try:
+        yield
+    finally:
+        _CURRENT_CACHE = prev
+
+
+def log_cache_event(role: str, info: Optional[dict] = None) -> None:
+    """Log one cache event into the phase log (same tagging rules as
+    `_route_phase`: only while a decision/slot scope is active). Cache
+    events are NOT network phases — diagnostics count exchanges by the
+    routing hook, so these entries never inflate phase counts."""
+    if _CURRENT_DECISION is None and _CURRENT_SLOT is None:
+        return
+    merged = dict(info or {})
+    if _CURRENT_SLOT is not None:
+        merged["slot"], merged["seq"] = _CURRENT_SLOT
+    _PHASE_LOG.append((role, _CURRENT_DECISION, merged or None))
+    if len(_PHASE_LOG) > PHASE_LOG_MAX:
+        del _PHASE_LOG[:-PHASE_LOG_MAX]
+
+
+def _notify_publish(dst: Array, off: Array,
+                    valid: Optional[Array]) -> None:
+    """Forward a publish flip to the active cache (no-op without one).
+    Tracer args degrade inside on_publish to the conservative channel."""
+    if _CURRENT_CACHE is not None:
+        _CURRENT_CACHE.on_publish(dst, off, valid)
 
 
 def drain_phase_log() -> List[Tuple[str, object, Optional[dict]]]:
@@ -403,6 +450,8 @@ def rdma_fao(win: Window, dst: Array, off: Array, operand: Array,
     (operand fold) and reconstructs each duplicate's fetched value from
     the representative's reply plus its exclusive operand prefix —
     bit-exact with the uncoalesced serialized apply (DESIGN.md §6)."""
+    if int(kind) == int(AmoKind.FXOR):
+        _notify_publish(dst, off, valid)
     operand = jnp.broadcast_to(jnp.asarray(operand, jnp.int32), off.shape)
     plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off, None,
                                         valid)
@@ -650,6 +699,7 @@ def rdma_cas_put(win: Window, dst: Array, off: Array, cmp: Array, new: Array,
 
     coalesce=True dedups runs of IDENTICAL descriptors (first-wins: one
     claim ships, duplicates short-circuit with the chained outcome)."""
+    _notify_publish(dst, off, valid)
     desc = _desc(off, AmoKind.CAS_PUT, cmp, new, put_off, 0, vals)
     plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off,
                                         desc[..., 2:], valid)
@@ -677,6 +727,7 @@ def rdma_cas_put_publish(win: Window, dst: Array, off: Array, cmp: Array,
     coalesce=True dedups runs of IDENTICAL descriptors: one claim (and one
     publish flip) ships per run, duplicates short-circuit with the chained
     outcome sender-side (DESIGN.md §6)."""
+    _notify_publish(dst, off, valid)
     desc = _desc(off, AmoKind.CAS_PUT_PUB, cmp, new, put_off, flip, vals)
     plan, co, eff_valid = _coalesce_for(plan, coalesce, dst, off,
                                         desc[..., 2:], valid)
@@ -708,6 +759,8 @@ def rdma_fao_get(win: Window, dst: Array, off: Array, operand: Array,
     and share the (phase-end) gathered record — bit-exact."""
     assert int(kind) in (int(AmoKind.FAA), int(AmoKind.FOR),
                          int(AmoKind.FAND), int(AmoKind.FXOR))
+    if int(kind) == int(AmoKind.FXOR):
+        _notify_publish(dst, off, valid)
     operand = jnp.broadcast_to(jnp.asarray(operand, jnp.int32), off.shape)
     get_off_b = jnp.broadcast_to(jnp.asarray(get_off, jnp.int32), off.shape)
     match = get_off_b[..., None]

@@ -1,5 +1,6 @@
 """Differential conformance suite (DESIGN.md §4): every backend — the
-python oracle, `am`, `rdma`, `rdma_fused`, and the adaptive `auto` — must
+python oracle, `am`, `rdma`, `rdma_fused`, the adaptive `auto`, and the
+cache-fronted `auto_cached` (DESIGN.md §8) — must
 produce bit-identical *visible* results (ok/found flags, values) for the
 same randomized op sequences, before the adaptive chooser is allowed to
 swap backends under traffic.
@@ -24,7 +25,7 @@ from repro.core.types import Promise
 
 P = 4
 VW = 1
-HT_BACKENDS = ("am", "rdma", "rdma_fused", "auto")
+HT_BACKENDS = ("am", "rdma", "rdma_fused", "auto", "auto_cached")
 Q_BACKENDS = ("am", "rdma", "rdma_fused", "auto")
 
 
@@ -50,9 +51,16 @@ class HtRunner:
         self.ht = ht_mod.make_hashtable(P, nslots, VW)
         self.eng = am_mod.AMEngine(P)
         ht_mod.build_am_handlers(self.ht, self.eng, max_probes=max_probes)
-        if backend == "auto":
+        if backend in ("auto", "auto_cached"):
             self.auto = ad_mod.AdaptiveEngine(P, am_engine=self.eng,
                                               policy="round_robin")
+        if backend == "auto_cached":
+            # hot-bucket cache (DESIGN.md §8) riding the same adaptive
+            # engine: visible results must stay bit-identical while finds
+            # are served from cache whenever entries are fresh
+            from repro.core import cache as cache_mod
+            self.auto.attach_cache(cache_mod.BucketCache(
+                P, nslots, VW, capacity=256, max_probes=max_probes))
 
     def insert(self, keys, valid=None):
         vals = _val_of(keys)
@@ -60,7 +68,7 @@ class HtRunner:
             self.ht, ok, _ = ht_mod.insert_rpc(self.ht, self.eng, keys,
                                                vals, valid=valid,
                                                coalesce=self.coalesce)
-        elif self.backend == "auto":
+        elif self.backend in ("auto", "auto_cached"):
             self.ht, ok, _ = self.auto.ht_insert(
                 self.ht, keys, vals, promise=Promise.CRW, valid=valid,
                 max_probes=self.max_probes)
@@ -77,7 +85,7 @@ class HtRunner:
             found, vals = ht_mod.find_rpc(self.ht, self.eng, keys,
                                           valid=valid,
                                           coalesce=self.coalesce)
-        elif self.backend == "auto":
+        elif self.backend in ("auto", "auto_cached"):
             self.ht, found, vals = self.auto.ht_find(
                 self.ht, keys, promise=promise, valid=valid,
                 max_probes=self.max_probes)

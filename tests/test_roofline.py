@@ -9,6 +9,14 @@ import pytest
 from repro.launch import hlo_stats
 
 
+def _cost(compiled) -> dict:
+    """jax 0.4.x cost_analysis() returns a one-element list of dicts."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def test_xla_cost_analysis_counts_loop_body_once():
     """The documented deficiency that motivates hlo_stats."""
     def f_scan(x):
@@ -21,8 +29,8 @@ def test_xla_cost_analysis_counts_loop_body_once():
         return x @ x
 
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    c_scan = jax.jit(f_scan).lower(x).compile().cost_analysis()
-    c_once = jax.jit(f_once).lower(x).compile().cost_analysis()
+    c_scan = _cost(jax.jit(f_scan).lower(x).compile())
+    c_once = _cost(jax.jit(f_once).lower(x).compile())
     assert c_scan.get("flops") == pytest.approx(c_once.get("flops"))
 
 
@@ -79,13 +87,17 @@ ENTRY %main (p: f32[64,128]) -> f32[64,128] {
 def test_hlo_stats_sharded_collectives_end_to_end():
     """all_to_all via shard_map on 1 device degenerates; instead check a
     psum-lowered all-reduce is found and byte-counted."""
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _axis_types_kwargs
+    mesh = jax.make_mesh((1,), ("d",), **_axis_types_kwargs(1))
+    if hasattr(jax, "shard_map"):
+        shard_map = jax.shard_map
+    else:  # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
 
     def f(x):
-        return jax.shard_map(lambda a: jax.lax.psum(a, "d"),
-                             mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-                             out_specs=jax.sharding.PartitionSpec())(x)
+        return shard_map(lambda a: jax.lax.psum(a, "d"),
+                         mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                         out_specs=jax.sharding.PartitionSpec())(x)
 
     x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
     compiled = jax.jit(f).lower(x).compile()
