@@ -46,7 +46,7 @@ from repro.core import hashtable as ht_mod
 from repro.core import window
 from repro.core.types import OpStats, Promise
 
-from .common import Csv, busy_wait, gen_batch_keys
+from .common import Csv, busy_wait, gen_batch_keys, stamp_label
 
 NSLOTS = 4096
 VAL_WORDS = 1
@@ -212,7 +212,10 @@ def run_scenario(spec: dict, P: int, n: int, batches: int,
                                   data0, keys, vals)[0]))
         chooser.observe(dec_i, us / ops)
         batch_us += us
-        skews.append(dec_i.skew)
+        # telemetry only (outside the charged decide span): steady-state
+        # decisions ride the pure-EWMA fast path and skip the host skew
+        # statistic, so the Decision record no longer carries it
+        skews.append(ad_mod.batch_skew(owners, P))
         arm_counts[dec_i.arm] = arm_counts.get(dec_i.arm, 0) + 1
 
         t0 = time.perf_counter()
@@ -278,7 +281,7 @@ def emit(report: dict, out="artifacts/bench", fname="BENCH_adaptive.json"):
     p = pathlib.Path(out) / fname
     p.parent.mkdir(parents=True, exist_ok=True)
     with open(p, "w") as f:
-        json.dump(report, f, indent=2)
+        json.dump(stamp_label(report), f, indent=2)
     print(f"# wrote {p}")
     return str(p)
 

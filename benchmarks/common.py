@@ -34,6 +34,40 @@ def time_op(fn: Callable, *args, iters: int = 20, warmup: int = 3,
     return med / ops_per_call * 1e6
 
 
+def git_label() -> tuple:
+    """(short HEAD label, dirty flag) at *this instant* — called by the
+    JSON emitters so every BENCH_*.json records the commit it was
+    measured under, not whatever HEAD trajectory.py later sees."""
+    import pathlib
+    import subprocess
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    label, dirty = "unknown", False
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=repo,
+                             timeout=10)
+        if out.returncode == 0:
+            label = out.stdout.strip()
+        st = subprocess.run(["git", "status", "--porcelain"],
+                            capture_output=True, text=True, cwd=repo,
+                            timeout=10)
+        dirty = st.returncode == 0 and bool(st.stdout.strip())
+    except Exception:
+        pass
+    return label, dirty
+
+
+def stamp_label(report: dict) -> dict:
+    """Stamp the current git label into a bench report in-place (and
+    return it). Emitters call this right before json.dump."""
+    label, dirty = git_label()
+    report["label"] = label
+    report["git_dirty"] = dirty
+    if dirty:
+        print(f"# WARNING: dirty tree — artifact stamped {label}+dirty")
+    return report
+
+
 def busy_wait(us: float) -> int:
     """Spin for `us` microseconds of real compute — the attentiveness
     emulation's interspersed target work (paper Fig. 6)."""

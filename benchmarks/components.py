@@ -31,7 +31,8 @@ from repro.core import routing
 from repro.core import window
 from repro.core.types import AmoKind
 
-from .common import Csv, gen_batch_keys, gen_zipf_dup_keys, time_op
+from .common import (Csv, gen_batch_keys, gen_zipf_dup_keys, stamp_label,
+                     time_op)
 
 LOCAL = 4096
 
@@ -439,6 +440,7 @@ def emit_json(all_rows, out="artifacts/bench",
             "network_phases_ht_find_crw": cm.network_phases(
                 cm.DSOp.HT_FIND, Promise.CRW, Backend.RDMA, fused=fused),
         }
+    stamp_label(report)
     p = pathlib.Path(out) / fname
     p.parent.mkdir(parents=True, exist_ok=True)
     with open(p, "w") as f:

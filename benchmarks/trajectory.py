@@ -8,19 +8,53 @@ per (suite, config) — because the trajectory is for spotting cross-PR
 cliffs, not for microbenchmark archaeology; the full per-op numbers stay
 in artifacts/bench/BENCH_*.json.
 
+The entry label comes from the artifacts themselves: every emitter
+stamps `label` (short HEAD at *measurement* time) into its JSON via
+benchmarks.common.stamp_label, so an artifact measured under commit A
+is never filed under commit B just because trajectory.py ran after a
+later commit landed (that mislabeling bit the c879e13/8a56c96 entry).
+Unstamped or mixed-label artifact sets fall back to HEAD with a
+warning.
+
     python -m benchmarks.trajectory          # collect + update from the
                                              # existing artifacts
+    python -m benchmarks.trajectory --check  # regression gate: compare
+                                             # the fresh entry against
+                                             # the last different-label
+                                             # entry; fail on any key
+                                             # > 20% worse (CI)
 """
 from __future__ import annotations
 
 import json
 import pathlib
 import subprocess
-from typing import Optional
+import sys
+from typing import Dict, List, Optional, Tuple
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 TRAJECTORY = REPO / "BENCH_trajectory.json"
 BENCH_DIR = REPO / "artifacts" / "bench"
+
+# Regression-gate knobs (--check): a key is a regression when the new
+# value is worse than the previous entry's same key by more than
+# CHECK_TOLERANCE. "Worse" is direction-aware — see _higher_is_better.
+CHECK_TOLERANCE = 0.20
+
+# Dotted key paths exempt from the gate. busy_us is a calibration knob
+# (sized per-run from the measured steady state, not a performance
+# result), and per_batch_us = stage time + busy_us, so both move with
+# the knob — the cross-PR pipeline metric is speedup_depth2, which IS
+# gated; median_regret is gated by the absolute <= 0.10 ceiling in
+# adaptive_bench --smoke, and its run-to-run noise at small batch counts
+# exceeds any sane relative tolerance.
+CHECK_OPT_OUT = (
+    "pipeline.busy_us",
+    "pipeline.per_batch_us",
+    "adaptive.median_regret",
+)
+
+_HIGHER_BETTER_MARKERS = ("speedup", "hit_rate", "dedup_ratio")
 
 
 def _git_label() -> str:
@@ -73,11 +107,33 @@ def _csv_medians(fname: str, impl_col: str, val_col: str) -> dict:
     return {impl: _median(v) for impl, v in by_impl.items()}
 
 
+def _resolve_label(artifacts: List[Optional[dict]]) -> str:
+    """Entry label from the artifacts' own stamps. Unique stamp wins;
+    no stamps -> HEAD fallback; mixed stamps -> HEAD with a warning
+    (the artifact set straddles commits and shouldn't be filed as one
+    measurement)."""
+    stamps = {a["label"] for a in artifacts
+              if a and a.get("label") and a["label"] != "unknown"}
+    dirty = any(a.get("git_dirty") for a in artifacts if a)
+    if dirty:
+        print("# WARNING: some artifacts were measured on a dirty tree")
+    if len(stamps) == 1:
+        return stamps.pop()
+    head = _git_label()
+    if len(stamps) > 1:
+        print(f"# WARNING: artifacts stamped with mixed labels "
+              f"{sorted(stamps)}; filing entry under HEAD ({head})")
+    return head
+
+
 def collect() -> dict:
     """One trajectory entry from whatever artifacts currently exist."""
-    entry: dict = {"label": _git_label()}
-
     comp = _load("BENCH_components.json")
+    pl = _load("BENCH_pipeline.json")
+    ad = _load("BENCH_adaptive.json")
+    sc = _load("BENCH_scaling.json")
+    entry: dict = {"label": _resolve_label([comp, pl, ad, sc])}
+
     if comp:
         rows = comp.get("rows", {})
         p8 = rows.get("8") or (rows[max(rows, key=int)] if rows else {})
@@ -100,15 +156,19 @@ def collect() -> dict:
                 "us_cached": ca.get("ht_read_heavy_find_cached"),
             }
 
-    pl = _load("BENCH_pipeline.json")
     if pl:
         entry["pipeline"] = {
             "speedup_depth2": pl.get("speedup_depth2"),
             "per_batch_us": pl.get("per_batch_us"),
             "busy_us": pl.get("busy_us"),
         }
+        cached = pl.get("cached")
+        if isinstance(cached, dict):
+            entry["pipeline"]["cached"] = {
+                "speedup_depth2": cached.get("speedup_depth2"),
+                "hit_rate_last_stream": cached.get("hit_rate_last_stream"),
+            }
 
-    ad = _load("BENCH_adaptive.json")
     if ad:
         scen = ad.get("scenarios", ad)
         regrets = [s.get("regret") for s in scen.values()
@@ -118,6 +178,9 @@ def collect() -> dict:
             "scenarios": sorted(k for k in scen if isinstance(
                 scen[k], dict)),
         }
+
+    if sc:
+        entry["scaling"] = _scaling_section(sc)
 
     ht = _csv_medians("hashtable.csv", "impl", "measured_us")
     if ht:
@@ -130,8 +193,34 @@ def collect() -> dict:
     return entry
 
 
+def _scaling_section(sc: dict) -> dict:
+    """Per-P medians from BENCH_scaling.json: for each mode (weak /
+    strong) and P, the median us/op across (struct, op) per arm — one
+    number per (mode, P, arm), coarse on purpose."""
+    out: dict = {}
+    for mode in ("weak", "strong"):
+        per_p = sc.get(mode)
+        if not isinstance(per_p, dict):
+            continue
+        out[mode] = {}
+        for p_str, rec in sorted(per_p.items(), key=lambda kv: int(kv[0])):
+            by_arm: Dict[str, list] = {}
+            for struct in ("ht", "q"):
+                for op_rows in (rec.get(struct) or {}).values():
+                    for arm, us in (op_rows or {}).items():
+                        if isinstance(us, (int, float)):
+                            by_arm.setdefault(arm, []).append(us)
+            out[mode][p_str] = {
+                arm: _median(v) for arm, v in sorted(by_arm.items())}
+    fitted = sc.get("fitted_params")
+    if isinstance(fitted, dict):
+        out["fitted_params"] = fitted
+    return out
+
+
 def update(path: pathlib.Path = TRAJECTORY) -> dict:
-    """Insert/replace this HEAD's entry in the trajectory file."""
+    """Insert/replace this entry in the trajectory file (keyed by the
+    artifact-stamped label)."""
     entry = collect()
     history = []
     if path.exists():
@@ -151,7 +240,81 @@ def update(path: pathlib.Path = TRAJECTORY) -> dict:
     return doc
 
 
-def main():
+# ---------------------------------------------------------------------------
+# Regression gate (--check)
+# ---------------------------------------------------------------------------
+
+def _flatten(d: dict, prefix: str = "") -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for k, v in d.items():
+        path = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(_flatten(v, path))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[path] = float(v)
+    return out
+
+
+def _higher_is_better(key: str) -> bool:
+    return any(m in key for m in _HIGHER_BETTER_MARKERS)
+
+
+def compare(prev: dict, new: dict,
+            tolerance: float = CHECK_TOLERANCE) -> List[Tuple[str, float,
+                                                              float, float]]:
+    """Regressions of `new` vs `prev`: list of (key, prev, new, ratio)
+    where ratio > 1 means `new` is worse by that factor. Keys present in
+    only one entry are skipped (new benches appear, old ones retire)."""
+    p_flat, n_flat = _flatten(prev), _flatten(new)
+    bad = []
+    for key in sorted(set(p_flat) & set(n_flat)):
+        if any(key == o or key.startswith(o + ".") for o in CHECK_OPT_OUT):
+            continue
+        pv, nv = p_flat[key], n_flat[key]
+        if pv <= 0 or nv <= 0:
+            continue
+        ratio = pv / nv if _higher_is_better(key) else nv / pv
+        if ratio > 1.0 + tolerance:
+            bad.append((key, pv, nv, ratio))
+    return bad
+
+
+def check(path: pathlib.Path = TRAJECTORY) -> bool:
+    """CI gate: collect a fresh entry from the current artifacts and
+    compare it against the last trajectory entry with a DIFFERENT label
+    (i.e. the previous PR's measurement). Does not write the file."""
+    new = collect()
+    history = []
+    if path.exists():
+        try:
+            with open(path) as f:
+                history = json.load(f).get("entries", [])
+        except (json.JSONDecodeError, AttributeError):
+            history = []
+    baseline = None
+    for e in reversed(history):
+        if e.get("label") != new["label"]:
+            baseline = e
+            break
+    if baseline is None:
+        print("# trajectory check: no prior entry to compare against; OK")
+        return True
+    bad = compare(baseline, new)
+    print(f"# trajectory check: {new['label']} vs {baseline['label']} "
+          f"(tolerance {CHECK_TOLERANCE:.0%})")
+    if not bad:
+        print("# trajectory check: OK — no key worse than tolerance")
+        return True
+    for key, pv, nv, ratio in bad:
+        print(f"REGRESSION {key}: {pv:.4g} -> {nv:.4g} "
+              f"({ratio - 1.0:+.1%} worse)")
+    return False
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--check" in argv:
+        sys.exit(0 if check() else 1)
     update()
 
 

@@ -20,6 +20,11 @@
 #    row of artifacts/bench/BENCH_components.json.
 # 6. docs check: README exists, DESIGN §-references and README paths
 #    resolve, examples/ compiles (scripts/check_docs.py).
+# 7. trajectory regression gate: the entry collected from the artifacts
+#    the smokes just refreshed must not be > 20% worse than the previous
+#    PR's entry on any key (benchmarks/trajectory.py --check, with its
+#    CHECK_OPT_OUT list); on pass, the entry is folded into
+#    BENCH_trajectory.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -50,5 +55,9 @@ python -m benchmarks.components --smoke-cache
 
 echo "== docs check (README / DESIGN references, examples compile) =="
 python scripts/check_docs.py
+
+echo "== trajectory regression gate (no key > 20% worse than last PR) =="
+python -m benchmarks.trajectory --check
+python -m benchmarks.trajectory
 
 echo "ci OK"

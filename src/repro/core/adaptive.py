@@ -75,6 +75,11 @@ class Decision:
                                   # hot-bucket cache (DESIGN.md §8)
     hit_rate: float = 0.0         # hit-rate EWMA the scores were priced
                                   # with (the fourth online signal)
+    depth: int = 1                # pipeline depth the batch runs at
+                                  # (DESIGN.md §9): 1 for the synchronous
+                                  # front-ends; the async front-ends stamp
+                                  # the chooser-picked (or pipe-configured)
+                                  # window count here
 
 
 def _concrete(x) -> Optional[np.ndarray]:
@@ -140,7 +145,18 @@ class AdaptiveEngine:
                 instead of the winner whenever the runner-up's EWMA has not
                 been refreshed for this many decisions of the same op —
                 bounded-cost exploration that prevents a single bad
-                measurement from starving an arm forever.
+                measurement from starving an arm forever. A clear loser
+                (score > 2x the winner's) is refreshed at a quarter of
+                that rate: probing it buys little information and its
+                full cost is charged to the stream.
+    hysteresis: relative margin under which a decision STICKS with the
+                op's incumbent arm when both its and the winner's scores
+                are measured EWMAs. Measured scores carry wall-clock
+                noise; without a dead band the argmin flip-flops between
+                near-equal arms and every flip executes the (slightly)
+                losing one — the median-regret creep of ISSUE 8. Model
+                scores are deterministic, so the band never applies to
+                them and the model-driven pins are unaffected.
     cache:      optional core/cache.BucketCache (DESIGN.md §8). Explicit
                 opt-in, NEVER auto-created: the default engines are shared
                 per-nranks across every table, and a cache is coherent for
@@ -162,7 +178,8 @@ class AdaptiveEngine:
                  params: ComponentCosts = cm.TPU_V5E_ICI,
                  alpha: float = 0.25, arms: Optional[Tuple[str, ...]] = None,
                  policy: str = "cost", measure: bool = False,
-                 explore_every: int = 0, cache=None):
+                 explore_every: int = 0, cache=None,
+                 hysteresis: float = 0.10):
         if arms is None:
             arms = ARMS if am_engine is not None else ("rdma", "rdma_fused")
         for a in arms:
@@ -180,11 +197,16 @@ class AdaptiveEngine:
         self.policy = policy
         self.measure = measure
         self.explore_every = explore_every
+        self.hysteresis = hysteresis
         self.force_arm: Optional[str] = None
         self.cache = cache
         self.hit_ewma = 0.0    # observed cache hit rate (4th online signal)
         self.write_ewma = 0.0  # observed write fraction of the op stream
         self.ewma: Dict[Tuple[DSOp, str], float] = {}
+        # fifth online signal (DESIGN.md §9): observed per-op batch latency
+        # per (op, depth) — overlays the predict_pipelined prior in
+        # choose_depth the same way `ewma` overlays predict_arm
+        self.depth_ewma: Dict[Tuple[DSOp, int], float] = {}
         # bounded ring: the default AUTO front-ends log every batch here
         # and nothing drains it
         self.log: collections.deque = collections.deque(maxlen=4096)
@@ -192,6 +214,7 @@ class AdaptiveEngine:
         self._rr = 0
         self._op_count: Dict[DSOp, int] = {}        # decisions per op
         self._seen: Dict[Tuple[DSOp, str], int] = {}  # last observe tick
+        self._last_arm: Dict[DSOp, str] = {}        # hysteresis incumbent
 
     # -- signals ------------------------------------------------------------
     def calibrate(self, measured: Dict[str, float]) -> ComponentCosts:
@@ -200,13 +223,37 @@ class AdaptiveEngine:
         self.params = cm.calibrate(measured, base=self.params)
         return self.params
 
+    #: a single observation may exceed the arm's EWMA by at most this
+    #: factor before it is clipped: a contended-host spike (the usual CI
+    #: artifact) otherwise inflates the winner's EWMA in one step and the
+    #: argmin flips to a genuinely slower arm for the several batches the
+    #: EWMA needs to recover. A real slowdown still gets through — each
+    #: clipped update raises the EWMA by alpha * (CLIP - 1) * prev, so a
+    #: few consecutive slow batches reprice the arm anyway.
+    OBSERVE_CLIP = 4.0
+
     def observe(self, decision: Decision, us_per_op: float) -> None:
         """EWMA-update the measured latency of (op, arm)."""
         key = (decision.op, decision.arm)
         prev = self.ewma.get(key)
+        if prev is not None:
+            us_per_op = min(us_per_op, self.OBSERVE_CLIP * prev)
         self.ewma[key] = (us_per_op if prev is None
                           else prev + self.alpha * (us_per_op - prev))
         self._seen[key] = self._op_count.get(decision.op, 0)
+        if decision.depth > 1 or (decision.op, decision.depth) \
+                in self.depth_ewma:
+            self.observe_depth(decision.op, decision.depth, us_per_op)
+
+    def observe_depth(self, op: DSOp, depth: int, us_per_op: float) -> None:
+        """EWMA-update the measured per-op latency of (op, depth) — the
+        fifth online signal. Fed by the pipelined benches and by `observe`
+        whenever a Decision carries a depth; `choose_depth` prefers these
+        measured numbers over the predict_pipelined prior."""
+        key = (op, max(1, int(depth)))
+        prev = self.depth_ewma.get(key)
+        self.depth_ewma[key] = (us_per_op if prev is None
+                                else prev + self.alpha * (us_per_op - prev))
 
     def attach_cache(self, cache) -> None:
         """Attach a hot-bucket cache (DESIGN.md §8). One cache per table:
@@ -226,16 +273,37 @@ class AdaptiveEngine:
 
     # -- decision -----------------------------------------------------------
     def scores(self, op: DSOp, promise: Promise,
-               stats: Optional[OpStats] = None) -> Tuple[Dict[str, float], str]:
+               stats: Optional[OpStats] = None,
+               skew: Optional[float] = None) -> Tuple[Dict[str, float], str]:
         """Per-arm score in µs/op: the measured EWMA when one exists for
         (op, arm), else the cost-model prediction. Returns (scores, source)
-        with source describing which inputs were used."""
+        with source describing which inputs were used. `skew` (when given)
+        overrides stats.skew for the model predictions — `decide` passes
+        the host-computed batch skew this way so the OpStats fold is paid
+        only on the model path."""
+        ew = self.ewma
+        out = {}
+        for arm in self.arms:
+            v = ew.get((op, arm))
+            if v is None:
+                break
+            out[arm] = v
+        else:
+            # fast path: every arm measured — no OpStats folding, no model
+            # evaluation. decide() sits on the application's critical path
+            # (charged per batch by the §4 regret accounting), and in the
+            # steady state this is the only path taken.
+            return out, "ewma"
         s = stats or OpStats()
+        if skew is not None and skew != s.skew:
+            s = replace(s, skew=skew)
+        if s.nranks == 0:
+            s = replace(s, nranks=self.nranks)
         out, used = {}, set()
         for arm in self.arms:
-            ew = self.ewma.get((op, arm))
-            if ew is not None:
-                out[arm] = ew
+            v = ew.get((op, arm))
+            if v is not None:
+                out[arm] = v
                 used.add("ewma")
             else:
                 out[arm] = cm.predict_arm(op, promise, arm, s, self.params)
@@ -260,8 +328,86 @@ class AdaptiveEngine:
         if self.policy == "round_robin":
             return self.arms[self._rr % len(self.arms)]
         scores, _ = self.scores(op, promise, stats)
-        rank = {"rdma_fused": 0, "am": 1, "am_pt": 2, "rdma": 3}
-        return min(scores, key=lambda a: (scores[a], rank[a]))
+        return self._cost_choice(op, scores)[0]
+
+    # tie-break toward the cheaper-at-runtime engine: the planned + fused
+    # arm strictly dominates the seed arm at equal predicted cost (the
+    # queue has no fused formula, so they tie there)
+    _ARM_RANK = {"rdma_fused": 0, "am": 1, "am_pt": 2, "rdma": 3}
+
+    def _cost_choice(self, op: DSOp, scores: Dict[str, float]):
+        """(arm, ranked arms) under the "cost" policy: argmin score with a
+        hysteresis dead band — when the incumbent's and the winner's
+        scores are BOTH measured EWMAs and the incumbent is within
+        `hysteresis` of the winner, keep the incumbent (measured numbers
+        jitter; flipping inside the noise band just executes the loser).
+        Model scores are deterministic, so they never engage the band."""
+        ranked = sorted(scores, key=lambda a: (scores[a], self._ARM_RANK[a]))
+        arm = ranked[0]
+        last = self._last_arm.get(op)
+        if (last is not None and last != arm and last in scores
+                and (op, last) in self.ewma and (op, arm) in self.ewma
+                and scores[last] <= scores[arm] * (1.0 + self.hysteresis)):
+            arm = last
+        return arm, ranked
+
+    def choose_depth(self, op: DSOp, promise: Promise,
+                     stats: Optional[OpStats] = None,
+                     arm: Optional[str] = None,
+                     max_depth: Optional[int] = None) -> int:
+        """Pipeline depth the engine recommends for this (op, promise,
+        stats) — the §9 auto-depth decision. Model prior: argmin of
+        `predict_pipelined` over `costmodel.DEPTH_CANDIDATES` for the arm
+        `peek_arm` would run (or the given one). Measured overlay: any
+        (op, depth) latency recorded via `observe_depth` (the fifth online
+        signal) replaces the model's number for that depth, so one bad
+        depth — e.g. the depth-4 queueing regression — is learned from a
+        single measured sweep even when the calibrated
+        `pipe_depth_overhead` underprices it. Ties break toward the
+        SHALLOWEST depth (extra windows are never free). Like `peek_arm`,
+        this logs nothing — the Decision that records the depth is cut at
+        stage time."""
+        s = stats or OpStats()
+        if s.nranks == 0:
+            s = replace(s, nranks=self.nranks)
+        if arm is None:
+            arm = self.peek_arm(op, promise, s)
+        cands = [d for d in sorted(set(int(x) for x in cm.DEPTH_CANDIDATES))
+                 if d >= 1 and (max_depth is None or d <= max_depth)]
+        model = {d: cm.predict_pipelined(op, promise, arm, s, self.params,
+                                         depth=d) for d in cands}
+        obs = {d: self.depth_ewma[(op, d)] for d in cands
+               if (op, d) in self.depth_ewma}
+        # Measured numbers carry host overheads the model doesn't, so an
+        # unobserved depth cannot compete on the raw model scale — anchor
+        # it by the mean measured/model ratio of the observed depths (the
+        # calibration-transfer idiom) before comparing.
+        factor = 1.0
+        if obs:
+            ratios = [obs[d] / model[d] for d in obs if model[d] > 0.0]
+            if ratios:
+                factor = sum(ratios) / len(ratios)
+        best_d, best_t = 1, float("inf")
+        for d in cands:
+            t = obs.get(d, model[d] * factor)
+            if t < best_t - 1e-9:
+                best_d, best_t = d, t
+        return best_d
+
+    def auto_depth(self, pipe, op: DSOp, promise: Promise,
+                   stats: Optional[OpStats] = None) -> OpStats:
+        """Submit-time §9 hook shared by the async front-ends: when `pipe`
+        opted into auto-depth, pick the window count via `choose_depth`,
+        retarget the pipeline (`Pipeline.set_depth`, capped at the pipe's
+        constructor depth), and return the stats priced at the chosen
+        depth — so the stage-time Decision records `depth` faithfully.
+        A fixed-depth pipeline passes through untouched."""
+        s = stats or OpStats()
+        if not getattr(pipe, "auto_depth", False):
+            return s
+        d = self.choose_depth(op, promise, s, max_depth=pipe.max_depth)
+        pipe.set_depth(d)
+        return replace(s, pipeline_depth=d)
 
     def decide(self, op: DSOp, promise: Promise, dst=None, valid=None,
                stats: Optional[OpStats] = None,
@@ -273,9 +419,15 @@ class AdaptiveEngine:
         (expected_probes, target_busy_us, ...)."""
         s = stats or OpStats()
         skew = s.skew
-        if dst is not None and skew == 1.0:
+        # the skew statistic feeds the MODEL's owner-serialization term;
+        # once every arm has a measured EWMA the decision never reads it,
+        # so the host-side bincount (the single largest decide() cost —
+        # this sits on the application's per-batch critical path) is
+        # computed only when some arm still needs a model price. Pure-EWMA
+        # decisions record the caller's stats.skew as-is.
+        ewma_complete = all((op, a) in self.ewma for a in self.arms)
+        if not ewma_complete and dst is not None and skew == 1.0:
             skew = batch_skew(dst, self.nranks, valid)
-        s = replace(s, skew=skew)
         dedup = s.dedup
         if nops is None:
             v = _concrete(valid)
@@ -286,10 +438,10 @@ class AdaptiveEngine:
                 # staging path that would serialize batch k+1 behind
                 # batch k's in-flight device work. Traced batches keep
                 # the documented batch_ops == 0 sentinel.
-                nops = int(np.prod(dst.shape))
+                nops = int(dst.size)
             else:
                 nops = 0
-        scores, source = self.scores(op, promise, s)
+        scores, source = self.scores(op, promise, s, skew=skew)
         tick = self._op_count.get(op, 0) + 1
         self._op_count[op] = tick
         if self.force_arm is not None:
@@ -299,16 +451,17 @@ class AdaptiveEngine:
             self._rr += 1
             source = "round_robin"
         else:
-            # tie-break toward the cheaper-at-runtime engine: the planned +
-            # fused arm strictly dominates the seed arm at equal predicted
-            # cost (the queue has no fused formula, so they tie there)
-            rank = {"rdma_fused": 0, "am": 1, "am_pt": 2, "rdma": 3}
-            ranked = sorted(scores, key=lambda a: (scores[a], rank[a]))
-            arm = ranked[0]
+            arm, ranked = self._cost_choice(op, scores)
+            self._last_arm[op] = arm
             if self.explore_every > 0 and len(ranked) > 1:
-                runner = ranked[1]
-                if (tick - self._seen.get((op, runner), 0)
-                        >= self.explore_every):
+                runner = ranked[1] if ranked[0] == arm else ranked[0]
+                need = self.explore_every
+                if scores[runner] > 2.0 * scores[arm]:
+                    # clear loser: its full cost is charged to the stream
+                    # and one probe per explore_every buys almost no
+                    # information — refresh it at a quarter of the rate
+                    need *= 4
+                if tick - self._seen.get((op, runner), 0) >= need:
                     arm, source = runner, "explore"
                     # mark the probe attempt NOW: if the caller never
                     # observes a latency, the staleness clock still resets
@@ -321,7 +474,8 @@ class AdaptiveEngine:
                        coalesce=cm.arm_coalesces(op, arm, dedup),
                        cached=(self.cache_reads_on()
                                and cm.arm_caches(op, promise, arm)),
-                       hit_rate=s.hit_rate)
+                       hit_rate=s.hit_rate,
+                       depth=max(1, int(s.pipeline_depth)))
         self.log.append(dec)
         self.last_decision = dec
         return dec

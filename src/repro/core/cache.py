@@ -225,14 +225,21 @@ class BucketCache:
     def drain_fills(self, force: Optional[bool] = None) -> None:
         """Apply pending fills whose device values are available.
 
-        force=None auto-detects: outside a pipeline slot scope it is safe
-        to block on the device values; while staging (§7) only fills whose
-        arrays are already ready are applied, the rest stay queued."""
+        force=None auto-detects: blocking on the device values is safe
+        only OUTSIDE the pipelined engine — not just outside a slot scope
+        (staging), but also between submits while any pipeline still holds
+        an in-flight window (`window.pipeline_inflight`). A host-side
+        drain there would materialize the previous batch's not-yet-forced
+        outputs and serialize against exactly the overlap the pipeline
+        buys (the PR 6 depth-2 regression); those fills stay queued until
+        their arrays turn ready on their own or the stream drains. Pass
+        force=True to block explicitly (tests, teardown)."""
         if not self._pending:
             return
         if force is None:
             from . import window as win_mod
-            force = win_mod._CURRENT_SLOT is None
+            force = (win_mod._CURRENT_SLOT is None
+                     and not win_mod.pipeline_inflight())
         keep = []
         for rec in self._pending:
             tick, keys, miss, slot, found, vals = rec

@@ -53,6 +53,22 @@ class ComponentCosts:
                                 # regression in BENCH_trajectory.json).
                                 # 0.0 = pure saturation; calibrate() sets
                                 # the measured slope.
+    # P-dependence (DESIGN.md §9). Both default to 0.0 so every fixed-P
+    # prediction (and any calibrated set that does not measure them) stays
+    # bit-identical to the P-blind model; scaling_bench fits the slopes.
+    exch_per_rank: float = 0.0
+                                # fractional growth of each one-sided wire
+                                # term per additional owner: the occupancy
+                                # exchange and the request/reply all-to-alls
+                                # are O(P) lanes wide, so each one-sided
+                                # component costs
+                                # base * (1 + exch_per_rank * (P - 1))
+    fanout_per_rank: float = 0.0
+                                # fractional growth of the AM round trip per
+                                # additional owner: the handler reply
+                                # fan-out crosses more lanes as the owner
+                                # count grows, scaling am_rt by
+                                # 1 + fanout_per_rank * (P - 1)
     # Fused component phases (None -> derived: the compound descriptor rides
     # the atomic's two exchanges, so a fused op costs its atomic; the saved
     # W / R / A_fao phases are the win). calibrate() overrides with measured
@@ -112,6 +128,29 @@ def attentiveness_delay(c: ComponentCosts, stats: OpStats) -> float:
     return stats.target_busy_us / 2.0
 
 
+def _p_scaled(c: ComponentCosts, stats: OpStats) -> ComponentCosts:
+    """Apply the §9 P-dependence to a parameter set: one-sided wire terms
+    grow with the occupancy-exchange width, am_rt with the reply fan-out.
+    Returns `c` unchanged when P is unknown (stats.nranks == 0) or both
+    slopes are zero, and zeroes the slopes on the result so the scaling is
+    idempotent under predict()'s internal recursion."""
+    p = int(stats.nranks)
+    if p <= 1 or (c.exch_per_rank == 0.0 and c.fanout_per_rank == 0.0):
+        return c
+    wire = 1.0 + c.exch_per_rank * (p - 1)
+    fan = 1.0 + c.fanout_per_rank * (p - 1)
+    return replace(
+        c,
+        W=c.W * wire, R=c.R * wire,
+        A_cas=c.A_cas * wire, A_fao=c.A_fao * wire,
+        A_cas_put=None if c.A_cas_put is None else c.A_cas_put * wire,
+        A_cas_put_pub=(None if c.A_cas_put_pub is None
+                       else c.A_cas_put_pub * wire),
+        A_fao_get=None if c.A_fao_get is None else c.A_fao_get * wire,
+        am_rt=c.am_rt * fan,
+        exch_per_rank=0.0, fanout_per_rank=0.0)
+
+
 def _rpc_cost(c: ComponentCosts, stats: OpStats) -> float:
     # Skew serializes handler work at the hot owner, but the AM round trip
     # itself is amortized by aggregation — only the (small) handler term
@@ -150,7 +189,7 @@ def predict(op: DSOp, promise: Promise, backend: Backend,
     formula plus the lookup overhead, which is why the chooser only
     prices the cached arm when a cache is attached and warm."""
     s = stats or OpStats()
-    c = params
+    c = _p_scaled(params, s)
     if backend == Backend.AUTO:
         raise ValueError("predict() needs a concrete backend; "
                          "use choose_backend() first")
@@ -160,7 +199,7 @@ def predict(op: DSOp, promise: Promise, backend: Backend,
             raise ValueError("cached pricing only applies to the "
                              "one-sided CR find (DESIGN.md §8)")
         hr = min(1.0, max(0.0, float(s.hit_rate)))
-        base = predict(op, promise, backend, s, params, fused=fused,
+        base = predict(op, promise, backend, s, c, fused=fused,
                        coalesce=coalesce, cached=False)
         return c.cache_lookup + (1.0 - hr) * base
     if backend == Backend.RPC:
@@ -180,7 +219,7 @@ def predict(op: DSOp, promise: Promise, backend: Backend,
         rho = min(1.0, max(float(s.dedup), 1e-3))
         base = predict(op, promise, backend,
                        replace(s, skew=max(1.0, s.skew * rho), dedup=1.0),
-                       params, fused=fused, coalesce=False)
+                       c, fused=fused, coalesce=False)
         return rho * base + c.combine
     amo = c.amo_apply * max(1.0, s.skew)
     if op == DSOp.HT_INSERT:
@@ -428,6 +467,40 @@ def predict_pipelined(op: DSOp, promise: Promise, arm: str,
     a, b = overlap_split(op, promise, arm, s, params)
     t = max(a, b) + min(a, b) / min(d, PIPELINE_STAGES)
     return t + max(0, d - PIPELINE_STAGES) * params.pipe_depth_overhead
+
+
+# Depths the auto-depth chooser prices (DESIGN.md §9) — the same ladder the
+# depth-sweep bench measures. With PIPELINE_STAGES = 2 the model can only
+# ever prefer 1 or 2 (depth 4 adds pipe_depth_overhead and no overlap), but
+# keeping 4 in the ladder pins exactly that: the chooser must never pick it.
+DEPTH_CANDIDATES = (1, 2, 4)
+
+
+def choose_depth(op: DSOp, promise: Promise, arm: str,
+                 stats: Optional[OpStats] = None,
+                 params: ComponentCosts = CORI_PHASE1,
+                 candidates: Tuple[int, ...] = DEPTH_CANDIDATES,
+                 max_depth: Optional[int] = None) -> int:
+    """Model-side pipeline-depth pick: argmin of `predict_pipelined` over
+    the candidate ladder, tie-broken toward the SHALLOWEST depth (depth is
+    never free — each extra window holds host memory and delays retirement,
+    so equal predicted latency means take the smaller window count).
+
+    An op whose owner-side share is zero (e.g. the bare CR find: no apply
+    lane, no handler) predicts identical latency at every depth and stays
+    at depth 1; owner-heavy ops (inserts with apply lanes, AM arms under
+    poor attentiveness) flip to depth 2 as the hidden share grows. The
+    online layer (`AdaptiveEngine.choose_depth`) overlays observed
+    per-depth batch latency on top of this prior."""
+    s = stats or OpStats()
+    best_d, best_t = 1, float("inf")
+    for d in sorted(set(int(x) for x in candidates)):
+        if d < 1 or (max_depth is not None and d > max_depth):
+            continue
+        t = predict_pipelined(op, promise, arm, s, params, depth=d)
+        if t < best_t - 1e-9:
+            best_d, best_t = d, t
+    return best_d
 
 
 def predict_arm(op: DSOp, promise: Promise, arm: str,

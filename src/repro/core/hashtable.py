@@ -230,7 +230,7 @@ def find_rdma(ht: DHashTable, keys: Array,
               promise: Promise = Promise.CR,
               valid: Optional[Array] = None, max_probes: int = 8,
               fused: bool = True, coalesce: bool = False,
-              cache=None) -> Tuple[DHashTable, Array, Array]:
+              cache=None, return_slot: bool = False):
     """Batched find. Returns (table', found (P,n), vals (P,n,vw)).
 
     C_R : one bare get per probe (flag+key+val in a single R).
@@ -258,8 +258,17 @@ def find_rdma(ht: DHashTable, keys: Array,
     miss subset (bit-identical occupancy, `routing.miss_subset_plan`)
     and the probe loop's fresh results are fed back via
     `cache.note_fill`. Bit-exact by the version protocol: a fresh entry
-    is exactly the record the wire would return."""
+    is exactly the record the wire would return.
+
+    return_slot=True (fused only, incompatible with `cache`): also return
+    the per-row hit slot (-1 for misses) as a fourth output — lets a
+    caller that manages its own BucketCache under jit (host lookup + one
+    jitted miss-subset step, benchmarks/pipeline_bench.py) feed
+    `cache.note_fill` without the eager integrated path."""
     assert promise in (Promise.CRW, Promise.CR)
+    if return_slot:
+        assert fused and cache is None, \
+            "return_slot needs fused=True and an external cache"
     if valid is None:
         valid = jnp.ones(keys.shape, dtype=bool)
     dst, start = _place(ht, keys)
@@ -334,7 +343,7 @@ def find_rdma(ht: DHashTable, keys: Array,
         # With a cache in play the carry additionally tracks each hit's
         # slot (the fill needs it to stamp versions); the cache-free trace
         # is untouched.
-        track = look is not None
+        track = look is not None or return_slot
 
         def probe_fused(carry):
             if track:
@@ -355,7 +364,7 @@ def find_rdma(ht: DHashTable, keys: Array,
         fin = jax.lax.while_loop(
             lambda c: (c[0] < max_probes) & c[2].any(), probe_fused, carry0)
         win, found, out = fin[1], fin[3], fin[4]
-        if track:
+        if look is not None:
             hitm = jnp.asarray(look.hit)
             found = found | hitm
             out = jnp.where(hitm[..., None], jnp.asarray(look.vals), out)
@@ -363,6 +372,9 @@ def find_rdma(ht: DHashTable, keys: Array,
             win_mod.log_cache_event("cache_hit", {
                 "hits": int(look.hit.sum()),
                 "misses": int(look.miss.sum())})
+        if return_slot:
+            return (DHashTable(win=win, nslots=nslots,
+                               val_words=ht.val_words), found, out, fin[5])
     else:
         win, _, found, out = jax.lax.fori_loop(
             0, max_probes,
@@ -630,7 +642,9 @@ def insert_async(pipe, keys, vals, *, promise=Promise.CRW,
 
     AUTO batches price arms with `stats.pipeline_depth = pipe.depth`
     (the §7 overlap term) and compute skew/dedup host-side via `place_np`
-    so staging never blocks on a device value."""
+    so staging never blocks on a device value. A `Pipeline(auto_depth=
+    True)` additionally lets the chooser retarget the window count per
+    batch (`AdaptiveEngine.auto_depth`, DESIGN.md §9)."""
     backend = as_backend(backend)
     eng = engine if engine is not None else pipe.am_engine
     st = pipe.staged_state
@@ -640,6 +654,7 @@ def insert_async(pipe, keys, vals, *, promise=Promise.CRW,
         a = adaptive or ad.default_engine(st.nranks, am_engine=eng)
         stats = _async_stats(st, keys, kw.get("valid"), kw.pop("stats", None),
                              pipe.depth)
+        stats = a.auto_depth(pipe, DSOp.HT_INSERT, promise, stats)
         if deferred is None:
             deferred = a.peek_arm(DSOp.HT_INSERT, promise,
                                   a._ht_stats(keys, kw.get("valid"), stats)
@@ -669,6 +684,7 @@ def find_async(pipe, keys, *, promise=Promise.CR, backend=Backend.AUTO,
         a = adaptive or ad.default_engine(st.nranks, am_engine=eng)
         stats = _async_stats(st, keys, kw.get("valid"), kw.pop("stats", None),
                              pipe.depth)
+        stats = a.auto_depth(pipe, DSOp.HT_FIND, promise, stats)
         if deferred is None:
             deferred = a.peek_arm(DSOp.HT_FIND, promise,
                                   a._ht_stats(keys, kw.get("valid"), stats)

@@ -129,20 +129,44 @@ class Pipeline:
     am_engine: optional `am.AMEngine`. Deferred (AM-arm) submissions queue
                on it and drain at dispatch points; without one the
                pipeline keeps its own FIFO with the same semantics.
+    auto_depth: make the window count a CHOOSER decision (DESIGN.md §9):
+               the async front-ends ask their AdaptiveEngine's
+               `choose_depth` before each submit and retarget the window
+               count via `set_depth`. The constructor `depth` becomes the
+               CAP — the chooser may shrink the window but never exceeds
+               the caller's budget.
 
     `Pipeline.state` is the latest *staged* state — its device values may
     still be in flight; `flush()` forces everything and returns it.
     """
 
-    def __init__(self, state: Any, depth: int = 2, am_engine=None):
+    def __init__(self, state: Any, depth: int = 2, am_engine=None,
+                 auto_depth: bool = False):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self._state = state
         self.depth = depth
         self.am_engine = am_engine
+        self.auto_depth = auto_depth
+        self.max_depth = depth
         self._inflight: collections.deque = collections.deque()
         self._own_queue: collections.deque = collections.deque()
         self._seq = 0
+
+    def set_depth(self, depth: int) -> None:
+        """Retarget the in-flight window count (the §9 auto-depth hook).
+
+        Clamped to [1, max_depth]. Shrinking forces the oldest batches
+        immediately so the at-most-`depth - 1`-in-flight invariant holds
+        before the next submit; growing just admits more windows. Safe to
+        call between any two submits — ordering is untouched."""
+        d = max(1, min(int(depth), self.max_depth))
+        self.depth = d
+        while len(self._inflight) > d - 1:
+            self._force(self._inflight[0])
+
+    def _note_inflight(self) -> None:
+        win_mod.note_pipeline_inflight(self, bool(self._inflight))
 
     # -- introspection ------------------------------------------------------
     @property
@@ -201,6 +225,7 @@ class Pipeline:
             self._drain_deferred()
             self._run(h, op)
         self._inflight.append(h)
+        self._note_inflight()
         while len(self._inflight) > self.depth - 1:
             self._force(self._inflight[0])
         return h
@@ -248,6 +273,7 @@ class Pipeline:
             self._inflight.remove(h)
         except ValueError:
             pass
+        self._note_inflight()
 
 
 def submit_many(pipe: Pipeline, ops: List[OpFn]) -> List[Handle]:

@@ -528,6 +528,8 @@ def push_async(pipe, vals, *, promise=Promise.CRW, backend=Backend.AUTO,
         from .costmodel import DSOp
         a = adaptive or ad.default_engine(q0.nranks, am_engine=eng)
         stats = _q_async_stats(kw.pop("stats", None), pipe.depth)
+        stats = a.auto_depth(pipe, DSOp.Q_PUSH, promise,
+                             a._host_stats(stats))
         if deferred is None:
             deferred = a.peek_arm(DSOp.Q_PUSH, promise,
                                   a._host_stats(stats)) in ("am", "am_pt")
@@ -555,6 +557,8 @@ def pop_async(pipe, n, *, promise=Promise.CR, backend=Backend.AUTO,
         from .costmodel import DSOp
         a = adaptive or ad.default_engine(q0.nranks, am_engine=eng)
         stats = _q_async_stats(kw.pop("stats", None), pipe.depth)
+        stats = a.auto_depth(pipe, DSOp.Q_POP, promise,
+                             a._host_stats(stats))
         if deferred is None:
             deferred = a.peek_arm(DSOp.Q_POP, promise,
                                   a._host_stats(stats)) in ("am", "am_pt")

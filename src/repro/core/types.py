@@ -117,3 +117,9 @@ class OpStats:
                                      # the host lookup. Only the cached find
                                      # arm (rdma_fused under CR) consults it;
                                      # 0.0 = no cache attached.
+    nranks: int = 0                  # shard count P the batch runs at
+                                     # (DESIGN.md §9): scales the per-rank
+                                     # occupancy-exchange and AM reply fan-out
+                                     # terms of the cost model. 0 = unknown —
+                                     # the model applies no P-dependence, so
+                                     # every P=8-era prediction is unchanged.

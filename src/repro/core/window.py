@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import weakref
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -62,6 +63,28 @@ _CURRENT_SLOT: Optional[Tuple[int, int]] = None
 # active cache of concrete publish flips (precision invalidation) and the
 # cache logs fill/invalidate events into the same phase log.
 _CURRENT_CACHE = None
+# Pipelines with unforced in-flight batches (DESIGN.md §7/§9): while any
+# exist, host-side cache maintenance between submits must stay
+# opportunistic — core/cache.BucketCache.drain_fills consults this so a
+# deferred-fill drain never blocks on an in-flight window's device values
+# (which would serialize the very overlap the pipeline exists to create).
+# WeakSet: an abandoned pipeline can never wedge the drain into
+# non-blocking mode forever.
+_INFLIGHT_PIPES: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def note_pipeline_inflight(pipe, active: bool) -> None:
+    """Record whether `pipe` currently holds unforced in-flight batches
+    (called by core/pipeline.Pipeline on every in-flight transition)."""
+    if active:
+        _INFLIGHT_PIPES.add(pipe)
+    else:
+        _INFLIGHT_PIPES.discard(pipe)
+
+
+def pipeline_inflight() -> bool:
+    """True while ANY pipeline holds unforced in-flight batches."""
+    return len(_INFLIGHT_PIPES) > 0
 # Explicit bound on the diagnostic ring: phases beyond this are dropped
 # oldest-first (library callers on the default AUTO path never drain it).
 PHASE_LOG_MAX = 4096

@@ -642,6 +642,197 @@ def test_auto_records_dedup_and_coalesces_duplicate_batches():
     assert dec.dedup == 1.0 and not dec.coalesce
 
 
+# ---------------------------------------------------------------------------
+# Scale-parameterized conformance (DESIGN.md §9): the plan / coalesce /
+# cache machinery must stay bit-exact when the shard count grows past the
+# P=4 default — the scaling benches run these shapes, so correctness at
+# P=16/64 is load-bearing, not hypothetical.
+# ---------------------------------------------------------------------------
+def _distinct_keys_at(rng, p, n, used=None):
+    used = set() if used is None else used
+    out = np.empty(p * n, np.int64)
+    i = 0
+    while i < out.size:
+        k = int(rng.integers(1, 1 << 30))
+        if k not in used:
+            used.add(k)
+            out[i] = k
+            i += 1
+    return jnp.asarray(out.reshape(p, n), jnp.int32)
+
+
+@pytest.mark.parametrize("scale_p", (16, 64))
+def test_scale_parameterized_conformance(scale_p):
+    """At P=16 and P=64: insert/find visible results are bit-identical
+    across {am, rdma, rdma_fused} x {coalesce on, off} and match the dict
+    oracle; the fused engine's slot occupancy is bit-identical with
+    coalescing on and off for distinct-key traffic (coalescing must be an
+    exact no-op there); and the cache-fronted find returns bit-exact
+    results both on the fill pass and when serving from cache."""
+    from repro.core import cache as cache_mod
+    rng = np.random.default_rng(scale_p)
+    n, nslots = 4, 64
+    eng = am_mod.AMEngine(scale_p)
+    ht_am = ht_mod.make_hashtable(scale_p, nslots, VW)
+    ht_mod.build_am_handlers(ht_am, eng)
+    tables = {"rdma": ht_mod.make_hashtable(scale_p, nslots, VW),
+              "rdma_fused": ht_mod.make_hashtable(scale_p, nslots, VW),
+              "rdma_fused+co": ht_mod.make_hashtable(scale_p, nslots, VW)}
+    used: set = set()
+    keys = _distinct_keys_at(rng, scale_p, n, used)
+    vals = _val_of(keys)
+    oks = {}
+    ht_am, oks["am"], _ = ht_mod.insert_rpc(ht_am, eng, keys, vals)
+    tables["rdma"], oks["rdma"], _ = ht_mod.insert_rdma(
+        tables["rdma"], keys, vals, promise=Promise.CRW, fused=False)
+    tables["rdma_fused"], oks["rdma_fused"], _ = ht_mod.insert_rdma(
+        tables["rdma_fused"], keys, vals, promise=Promise.CRW, fused=True)
+    tables["rdma_fused+co"], oks["rdma_fused+co"], _ = ht_mod.insert_rdma(
+        tables["rdma_fused+co"], keys, vals, promise=Promise.CRW,
+        fused=True, coalesce=True)
+    oracle = {int(k): _np_val_of(int(k))
+              for k in np.asarray(keys).ravel().tolist()}
+    _assert_all_agree({b: np.asarray(ok) for b, ok in oks.items()},
+                      f"P={scale_p} insert ok")
+    assert np.asarray(oks["rdma"]).all()
+    # occupancy bit-identical: distinct-key coalescing is an exact no-op
+    np.testing.assert_array_equal(
+        np.asarray(tables["rdma_fused"].win.data),
+        np.asarray(tables["rdma_fused+co"].win.data),
+        err_msg=f"P={scale_p}: coalescing changed fused slot occupancy")
+    probe = jnp.concatenate(
+        [keys[:, :2], _distinct_keys_at(rng, scale_p, 2, used)], axis=1)
+    founds = {}
+    founds["am"] = ht_mod.find_rpc(ht_am, eng, probe)
+    for b in ("rdma", "rdma_fused"):
+        _, f, v = ht_mod.find_rdma(tables[b], probe, fused=b != "rdma")
+        founds[b] = (f, v)
+    _, f, v = ht_mod.find_rdma(tables["rdma_fused"], probe, fused=True,
+                               coalesce=True)
+    founds["rdma_fused+co"] = (f, v)
+    _assert_all_agree({b: np.asarray(f[0]) for b, f in founds.items()},
+                      f"P={scale_p} found")
+    _assert_all_agree({b: np.asarray(f[1]) for b, f in founds.items()},
+                      f"P={scale_p} find vals")
+    ref_found, ref_vals = founds["rdma_fused"]
+    for idx, key in np.ndenumerate(np.asarray(probe)):
+        want = oracle.get(int(key))
+        assert bool(np.asarray(ref_found)[idx]) == (want is not None)
+        if want is not None:
+            assert int(np.asarray(ref_vals)[idx + (0,)]) == want
+    # cache-fronted find: fill pass and hit-serving pass both bit-exact
+    cache = cache_mod.BucketCache(scale_p, nslots, VW, capacity=1024,
+                                  max_probes=8)
+    _, cf, cv = ht_mod.find_rdma(tables["rdma_fused"], probe, fused=True,
+                                 cache=cache)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(ref_found))
+    np.testing.assert_array_equal(np.asarray(cv), np.asarray(ref_vals))
+    cache.drain_fills()
+    _, cf2, cv2 = ht_mod.find_rdma(tables["rdma_fused"], probe, fused=True,
+                                   cache=cache)
+    assert cache.counters["hits"] > 0, "second pass never hit the cache"
+    np.testing.assert_array_equal(np.asarray(cf2), np.asarray(ref_found))
+    np.testing.assert_array_equal(np.asarray(cv2), np.asarray(ref_vals))
+
+
+@pytest.mark.parametrize("scale_p", (16, 64))
+def test_scale_duplicate_stream_coalesced_agree(scale_p):
+    """Zipfian duplicate-heavy streams at P=16/64: coalesced and
+    uncoalesced fused arms and the AM arm return bit-identical visible
+    results (the §6 invariant does not decay with shard count). The key
+    universe scales with P so the worst duplicate group stays within
+    max_probes — probe exhaustion is out of the conformance domain
+    (DESIGN.md §4), at any scale."""
+    rng = np.random.default_rng(100 + scale_p)
+    nslots, max_probes = 512, 128
+    universe = 4 * scale_p
+    eng = am_mod.AMEngine(scale_p)
+    ht_am = ht_mod.make_hashtable(scale_p, nslots, VW)
+    ht_mod.build_am_handlers(ht_am, eng, max_probes=max_probes)
+    ht_f = ht_mod.make_hashtable(scale_p, nslots, VW)
+    ht_c = ht_mod.make_hashtable(scale_p, nslots, VW)
+    keys = _zipf_dup_keys(rng, universe, (scale_p, 4))
+    vals = _val_of(keys)
+    ht_am, ok_a, _ = ht_mod.insert_rpc(ht_am, eng, keys, vals)
+    ht_f, ok_f, _ = ht_mod.insert_rdma(ht_f, keys, vals,
+                                       promise=Promise.CRW, fused=True,
+                                       max_probes=max_probes)
+    ht_c, ok_c, _ = ht_mod.insert_rdma(ht_c, keys, vals,
+                                       promise=Promise.CRW, fused=True,
+                                       coalesce=True,
+                                       max_probes=max_probes)
+    _assert_all_agree({"am": np.asarray(ok_a), "fused": np.asarray(ok_f),
+                       "fused+co": np.asarray(ok_c)},
+                      f"P={scale_p} zipf insert ok")
+    probe = _zipf_dup_keys(rng, universe, (scale_p, 4))
+    fa, va = ht_mod.find_rpc(ht_am, eng, probe)
+    _, ff, vf = ht_mod.find_rdma(ht_f, probe, fused=True,
+                                 max_probes=max_probes)
+    _, fc, vc = ht_mod.find_rdma(ht_c, probe, fused=True, coalesce=True,
+                                 max_probes=max_probes)
+    _assert_all_agree({"am": np.asarray(fa), "fused": np.asarray(ff),
+                       "fused+co": np.asarray(fc)},
+                      f"P={scale_p} zipf found")
+    _assert_all_agree({"am": np.asarray(va), "fused": np.asarray(vf),
+                       "fused+co": np.asarray(vc)},
+                      f"P={scale_p} zipf vals")
+
+
+def test_auto_depth_decision_flips_with_workload_and_p():
+    """The §9 chooser pin: Decision.depth is a real decision axis — the
+    bare CR find (no owner-side share to hide) stays at depth 1 while the
+    owner-heavy insert runs depth 2; the regressed depth 4 is never
+    chosen; a measured depth regression recorded via observe_depth flips
+    the choice back to 1; and with P-dependent wire terms the SAME CR
+    find flips arm (rdma_fused -> am) and depth (1 -> 2) as P grows."""
+    from repro.core import costmodel as cm
+    from repro.core.costmodel import DSOp
+    eng = am_mod.AMEngine(P)
+    a = ad_mod.AdaptiveEngine(P, am_engine=eng)
+    assert a.choose_depth(DSOp.HT_FIND, Promise.CR) == 1
+    assert a.choose_depth(DSOp.HT_INSERT, Promise.CRW) == 2
+    for op in (DSOp.HT_FIND, DSOp.HT_INSERT, DSOp.Q_PUSH, DSOp.Q_POP):
+        assert a.choose_depth(op, Promise.CRW) in (1, 2)  # never 4
+    # fifth online signal: an observed depth-2 regression wins over the
+    # model prior
+    a.observe_depth(DSOp.HT_INSERT, 1, 5.0)
+    a.observe_depth(DSOp.HT_INSERT, 2, 9.0)
+    assert a.choose_depth(DSOp.HT_INSERT, Promise.CRW) == 1
+    # P-flip: same op + promise, arms re-ranked by the P-scaled wire terms
+    cal = cm.calibrate({"W": 1.0, "R": 1.8, "A_cas": 1.6, "A_fao": 1.6,
+                        "am_rt": 2.8, "handler": 0.1, "amo_apply": 0.2,
+                        "exch_per_rank": 0.025, "fanout_per_rank": 0.001},
+                       base=cm.TPU_V5E_ICI)
+    small = ad_mod.AdaptiveEngine(8, am_engine=eng, params=cal)
+    large = ad_mod.AdaptiveEngine(256, am_engine=eng, params=cal)
+    assert small.peek_arm(DSOp.HT_FIND, Promise.CR) == "rdma_fused"
+    assert small.choose_depth(DSOp.HT_FIND, Promise.CR) == 1
+    assert large.peek_arm(DSOp.HT_FIND, Promise.CR) == "am"
+    assert large.choose_depth(DSOp.HT_FIND, Promise.CR) == 2
+
+
+def test_auto_depth_through_pipeline_records_decision_depth():
+    """End-to-end §9: an auto-depth pipeline retargets its window count
+    per submit and the stage-time Decision records the chosen depth —
+    depth 2 for the insert, depth 1 for the bare CR find."""
+    from repro.core import pipeline as pl_mod
+    from repro.core.costmodel import DSOp
+    rng = np.random.default_rng(30)
+    eng = am_mod.AMEngine(P)
+    a = ad_mod.AdaptiveEngine(P, am_engine=eng)
+    ht0 = ht_mod.make_hashtable(P, 128, VW)
+    ht_mod.build_am_handlers(ht0, eng)
+    pipe = pl_mod.Pipeline(ht0, depth=2, am_engine=eng, auto_depth=True)
+    keys = _distinct_keys(rng, (P, 4))
+    h1 = ht_mod.insert_async(pipe, keys, _val_of(keys), adaptive=a)
+    h2 = ht_mod.find_async(pipe, keys, promise=Promise.CR, adaptive=a)
+    pipe.flush()
+    h1.result(), h2.result()
+    by_op = {d.op: d.depth for d in a.log}
+    assert by_op[DSOp.HT_INSERT] == 2
+    assert by_op[DSOp.HT_FIND] == 1
+
+
 def test_hypothesis_ht_conformance():
     """Hypothesis-driven randomized sequences (skipped when hypothesis is
     not installed, matching tests/test_properties.py)."""

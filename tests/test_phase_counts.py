@@ -257,6 +257,68 @@ def test_rpc_exchange_count_constant_in_handler_complexity():
 
 
 # ---------------------------------------------------------------------------
+# Scale-parameterized phase counts (DESIGN.md §9): the §2 exchange table
+# is P-INDEPENDENT — growing the shard count widens each exchange's lanes
+# but never adds a network phase. Pinned at P=16 and P=64 so the scaling
+# benches measure wider exchanges, not silently more of them.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scale_p", (16, 64))
+def test_exchange_counts_p_independent(scale_p):
+    """Planned put=1, get=2, cas=2, fao=2, AM dispatch=2, plan occupancy=1
+    at P=16/64 — identical to the P=4 table above."""
+    rng = np.random.default_rng(scale_p)
+    dst = jnp.asarray(rng.integers(0, scale_p, (scale_p, 4)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 32, (scale_p, 4)), jnp.int32)
+    win = window.make_window(scale_p, 64)
+    vals = jnp.ones((scale_p, 4, 2), jnp.int32)
+    plan = routing.make_plan(dst, cap=4)
+    c = ExchangeCounter()
+    assert c.run(lambda: window.rdma_put(win, dst, off, vals, plan=plan)) == 1
+    assert c.run(lambda: window.rdma_get(win, dst, off, 2, plan=plan)) == 2
+    assert c.run(lambda: window.rdma_cas(win, dst, off, 0, 1, plan=plan)) == 2
+    assert c.run(lambda: window.rdma_fao(win, dst, off, 1, AmoKind.FAA,
+                                         plan=plan)) == 2
+    assert c.run(lambda: routing.make_plan(dst, cap=4).mask) == 1
+    assert c.mask_exchanges() == cm.PLAN_EXCHANGES == 1
+    eng = am_mod.AMEngine(scale_p)
+    echo = eng.register("echo", lambda l, p, m: (l, p[:, :1]),
+                        reply_width=1)
+    state = jnp.zeros((scale_p, 4), jnp.int32)
+    assert c.run(lambda: eng.dispatch(echo, state, dst, vals,
+                                      plan=plan)) == 2
+
+
+@pytest.mark.parametrize("scale_p", (16, 64))
+def test_planned_ht_batch_one_occupancy_exchange_at_scale(scale_p):
+    """A fused hash-table batch at P=16/64 still exchanges the occupancy
+    mask exactly ONCE (at plan time) — the §9 scaling claim that per-batch
+    phase structure is flat in P, and the coalesce plan's occupancy is
+    bit-identical to the plain plan's on distinct traffic."""
+    from repro.core import hashtable as ht_mod
+    keys = (jnp.arange(scale_p * 4, dtype=jnp.int32).reshape(scale_p, 4)
+            + 1)
+    vals = jnp.stack([keys, keys], axis=-1)
+    ht, _, _ = ht_mod.insert_rdma(ht_mod.make_hashtable(scale_p, 64, 2),
+                                  keys, vals, promise=Promise.CRW)
+    c = ExchangeCounter()
+    c.run(lambda: ht_mod.find_rdma(ht, keys, promise=Promise.CRW,
+                                   max_probes=1, fused=True)[1])
+    assert c.mask_exchanges() == cm.PLAN_EXCHANGES == 1
+    c.run(lambda: ht_mod.insert_rdma(
+        ht_mod.make_hashtable(scale_p, 64, 2), keys, vals,
+        promise=Promise.CRW, max_probes=1, fused=True)[0].win.data)
+    assert c.mask_exchanges() == 1
+    # occupancy bit-exactness across the plan paths
+    rng = np.random.default_rng(scale_p + 1)
+    dst = jnp.asarray(rng.integers(0, scale_p, (scale_p, 5)), jnp.int32)
+    off = jnp.asarray(rng.integers(0, 64, (scale_p, 5)), jnp.int32)
+    plain = routing.make_plan(dst, cap=5)
+    co = routing.coalesce_plan(dst, off, cap=5)
+    np.testing.assert_array_equal(np.asarray(plain.mask),
+                                  np.asarray(co.plan.mask))
+
+
+# ---------------------------------------------------------------------------
 # Sharded-HLO cross-check (the roofline collective counter sees the same
 # phase structure the hook counts).
 # ---------------------------------------------------------------------------
