@@ -16,9 +16,21 @@ CI knobs (de-flaking): the RNG is seeded (`seed`), and the sweep is
 env-overridable — REPRO_ATT_ROUNDS (int), REPRO_ATT_BUSY (comma list of
 µs), REPRO_ATT_SEED. `--smoke` runs a seconds-scale two-point sweep that
 only asserts the structural Fig. 6 shape (AM latency grows with busy).
+
+Fault sweep (DESIGN.md §10): `--faults` replays a mixed insert/find
+stream per arm under seeded FaultPlans of increasing loss
+(`--loss-rate` / REPRO_FAULT_LOSS comma list, `--dead-owner` /
+REPRO_FAULT_DEAD rank) and records the plane's deterministic retransmit
+counters plus conformance vs the fault-free oracle into
+artifacts/bench/BENCH_faults.json (trajectory.py files it under a
+"faults" section). `--smoke-chaos` is the CI gate: a seeded soak of
+drops + duplicates + one permanently dead owner at P=8 must stay
+conformant on every arm, and a permanently stalled queue must raise
+RemoteTimeout inside the retry deadline instead of hanging.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -27,13 +39,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import adaptive as ad_mod
 from repro.core import am as am_mod
 from repro.core import costmodel as cm
+from repro.core import faults as flt
+from repro.core import hashtable as ht_mod
+from repro.core import pipeline as pl_mod
 from repro.core import queue as q_mod
 from repro.core.types import Promise
 
 from . import components
-from .common import Csv, busy_wait as _busy_wait
+from .common import Csv, busy_wait as _busy_wait, stamp_label
 
 
 def _env_overrides(rounds, busy_list, seed):
@@ -138,7 +154,166 @@ def smoke() -> bool:
     return ok
 
 
+# ---------------------------------------------------------------------------
+# Fault sweep + chaos gate (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+_FAULT_ARMS = ("rdma", "rdma_fused", "am", "auto")
+
+
+def _val_of(keys):
+    return jnp.concatenate([((keys * 31 + 7) & 0x7FFFFF)[..., None],
+                            ((keys * 17 + 3) & 0x7FFFFF)[..., None]],
+                           axis=-1).astype(jnp.int32)
+
+
+class _ArmStream:
+    """Mixed insert/find stream on one arm — the fault-free instance is
+    the oracle (cross-arm conformance is pinned by the test suite)."""
+
+    def __init__(self, nranks: int, arm: str, nslots: int = 256):
+        self.ht = ht_mod.make_hashtable(nranks, nslots, 2)
+        self.auto = ad_mod.AdaptiveEngine(nranks,
+                                          am_engine=am_mod.AMEngine(nranks),
+                                          policy="round_robin")
+        if arm != "auto":
+            self.auto.policy = "cost"
+            self.auto.force_arm = arm
+
+    def step(self, keys):
+        self.ht, ok, _ = self.auto.ht_insert(self.ht, keys, _val_of(keys))
+        self.ht, found, vals = self.auto.ht_find(self.ht, keys)
+        return np.asarray(ok), np.asarray(found), np.asarray(vals)
+
+
+def _distinct_batches(nranks: int, nbatches: int, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    flat = rng.choice(np.arange(1, 1 << 20), size=nbatches * nranks * n,
+                      replace=False)
+    return [jnp.asarray(flat[i * nranks * n:(i + 1) * nranks * n]
+                        .reshape(nranks, n), jnp.int32)
+            for i in range(nbatches)]
+
+
+def _run_schedule(nranks: int, arm: str, plan, batches):
+    """(conformant, wall_us_per_batch): replay `batches` under `plan`
+    next to a fault-free oracle and compare every visible output."""
+    oracle, chaos = _ArmStream(nranks, arm), _ArmStream(nranks, arm)
+    plan.reset()
+    conformant = True
+    t0 = time.perf_counter()
+    for keys in batches:
+        o = oracle.step(keys)
+        with flt.fault_scope(plan):
+            c = chaos.step(keys)
+        conformant &= all(np.array_equal(a, b) for a, b in zip(o, c))
+    wall = (time.perf_counter() - t0) * 1e6 / max(1, len(batches))
+    return conformant, wall
+
+
+def _fault_env(loss_rates, dead_owner):
+    env = os.environ.get("REPRO_FAULT_LOSS")
+    if env:
+        loss_rates = tuple(float(x) for x in env.split(","))
+    if "--loss-rate" in sys.argv:
+        loss_rates = (float(sys.argv[sys.argv.index("--loss-rate") + 1]),)
+    env = os.environ.get("REPRO_FAULT_DEAD")
+    if env is not None:
+        dead_owner = int(env)
+    if "--dead-owner" in sys.argv:
+        dead_owner = int(sys.argv[sys.argv.index("--dead-owner") + 1])
+    return loss_rates, dead_owner
+
+
+def fault_sweep(nranks: int = 8, nbatches: int = 4, n: int = 8,
+                loss_rates=(0.05, 0.2, 0.4), dead_owner=None,
+                seed: int = 7, out: str = "artifacts/bench"):
+    """Per-loss-rate fault sweep: conformance plus the plane's
+    deterministic retransmit counters (pure functions of the seed, so
+    the trajectory gate sees run-to-run-stable numbers, unlike wall
+    time, which is reported but not filed)."""
+    report = {"schema": "bench-faults-v1", "P": nranks,
+              "dead_owner": dead_owner, "seed": seed, "sweep": {}}
+    batches = _distinct_batches(nranks, nbatches, n, seed)
+    for lr in loss_rates:
+        dead = {int(dead_owner): None} if dead_owner is not None else None
+        row = {"drop_rate": lr, "dup_rate": lr / 2,
+               "nonconformant_arms": 0}
+        for arm in _FAULT_ARMS:
+            plan = flt.FaultPlan(nranks, seed=seed, drop_rate=lr,
+                                 dup_rate=lr / 2, dead_owners=dead)
+            okc, wall = _run_schedule(nranks, arm, plan, batches)
+            s = plan.stats()
+            row[f"wall_us_{arm}"] = round(wall, 1)
+            row["nonconformant_arms"] += 0 if okc else 1
+            if arm == "rdma":     # plane counters: same plan per arm
+                row.update(retransmits=s["dropped"],
+                           dup_redeliveries=s["dup_filtered"],
+                           backoff_units=round(s["backoff_total"], 2),
+                           exhausted=s["exhausted"])
+        report["sweep"][f"{lr:g}"] = row
+        print(f"# faults loss={lr:g}: retransmits={row['retransmits']} "
+              f"dups={row['dup_redeliveries']} "
+              f"nonconformant={row['nonconformant_arms']}")
+    os.makedirs(out, exist_ok=True)
+    with open(f"{out}/BENCH_faults.json", "w") as f:
+        json.dump(stamp_label(report), f, indent=2)
+    return report
+
+
+def smoke_chaos() -> bool:
+    """CI chaos gate: a seeded soak — drops + duplicates + one
+    permanently dead owner at P=8 — must stay conformant with the
+    fault-free oracle on every arm, the plane must never exhaust a row
+    (exactly-once holds inside the retry budget), and a permanently
+    stalled deferred queue must fail fast with RemoteTimeout instead of
+    hanging past the retry deadline."""
+    nranks, ok = 8, True
+    batches = _distinct_batches(nranks, nbatches=3, n=8, seed=11)
+    for arm in _FAULT_ARMS:
+        plan = flt.FaultPlan(nranks, seed=17, drop_rate=0.25,
+                             dup_rate=0.30, dead_owners={2: None})
+        conf, wall = _run_schedule(nranks, arm, plan, batches)
+        s = plan.stats()
+        arm_ok = conf and s["exhausted"] == 0
+        ok &= arm_ok
+        print(f"# chaos {arm:10s}: conformant={conf} "
+              f"exhausted={s['exhausted']} ({wall:.0f} us/batch) "
+              f"({'OK' if arm_ok else 'FAIL'})")
+    # liveness: dead queue -> typed timeout inside the deadline ceiling
+    plan = flt.FaultPlan(nranks, seed=17, stall_forever=True,
+                         retry=flt.RetryPolicy(deadline=8))
+    plan.reset()
+    eng = am_mod.AMEngine(nranks)
+    ht = ht_mod.make_hashtable(nranks, 256, 2)
+    keys = batches[0]
+    t0 = time.perf_counter()
+    try:
+        with flt.fault_scope(plan):
+            pipe = pl_mod.Pipeline(ht, depth=2, am_engine=eng)
+
+            def op(state, k=keys):
+                st, okk, _ = ht_mod.insert_rdma(st, k, _val_of(k))
+                return st, okk
+
+            h = pipe.submit(op, deferred=True)
+            h.result(timeout=8)
+        timed_out = False
+    except flt.RemoteTimeout:
+        timed_out = True
+    dt = time.perf_counter() - t0
+    ok &= timed_out and dt < 60.0
+    print(f"# chaos dead-queue: RemoteTimeout={timed_out} in {dt:.1f}s "
+          f"({'OK' if timed_out else 'FAIL'})")
+    return ok
+
+
 if __name__ == "__main__":
     if "--smoke" in sys.argv:
         sys.exit(0 if smoke() else 1)
+    if "--smoke-chaos" in sys.argv:
+        sys.exit(0 if smoke_chaos() else 1)
+    if "--faults" in sys.argv:
+        rates, dead = _fault_env((0.05, 0.2, 0.4), None)
+        fault_sweep(loss_rates=rates, dead_owner=dead)
+        sys.exit(0)
     main()

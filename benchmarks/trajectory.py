@@ -132,7 +132,8 @@ def collect() -> dict:
     pl = _load("BENCH_pipeline.json")
     ad = _load("BENCH_adaptive.json")
     sc = _load("BENCH_scaling.json")
-    entry: dict = {"label": _resolve_label([comp, pl, ad, sc])}
+    fl = _load("BENCH_faults.json")
+    entry: dict = {"label": _resolve_label([comp, pl, ad, sc, fl])}
 
     if comp:
         rows = comp.get("rows", {})
@@ -181,6 +182,21 @@ def collect() -> dict:
 
     if sc:
         entry["scaling"] = _scaling_section(sc)
+
+    if fl:
+        # deterministic plane counters only (pure functions of the
+        # sweep seed): wall_us_* stays in the artifact, not the
+        # trajectory, because chaos replay wall time is compile- and
+        # load-dominated
+        faults: dict = {}
+        for lr, row in sorted((fl.get("sweep") or {}).items(),
+                              key=lambda kv: float(kv[0])):
+            faults[lr] = {k: row[k] for k in
+                          ("retransmits", "dup_redeliveries",
+                           "backoff_units", "exhausted",
+                           "nonconformant_arms") if k in row}
+        if faults:
+            entry["faults"] = faults
 
     ht = _csv_medians("hashtable.csv", "impl", "measured_us")
     if ht:

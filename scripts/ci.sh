@@ -18,9 +18,14 @@
 #    fused+coalesced path with >= 0.9 hit rate, zero-exchange steady
 #    state, and bit-exact results (DESIGN.md §8), refreshing the cache
 #    row of artifacts/bench/BENCH_components.json.
-# 6. docs check: README exists, DESIGN §-references and README paths
+# 6. chaos soak smoke: seeded drops + duplicates + one permanently dead
+#    owner at P=8 stay conformant with the fault-free oracle on every
+#    arm, and a dead deferred queue raises RemoteTimeout inside the
+#    retry deadline (DESIGN.md §10); also refreshes
+#    artifacts/bench/BENCH_faults.json via the fault sweep.
+# 7. docs check: README exists, DESIGN §-references and README paths
 #    resolve, examples/ compiles (scripts/check_docs.py).
-# 7. trajectory regression gate: the entry collected from the artifacts
+# 8. trajectory regression gate: the entry collected from the artifacts
 #    the smokes just refreshed must not be > 20% worse than the previous
 #    PR's entry on any key (benchmarks/trajectory.py --check, with its
 #    CHECK_OPT_OUT list); on pass, the entry is folded into
@@ -52,6 +57,10 @@ python -m benchmarks.pipeline_bench --smoke
 
 echo "== cache-tier smoke (DESIGN.md §8, read-heavy find >= 5x) =="
 python -m benchmarks.components --smoke-cache
+
+echo "== chaos soak smoke (DESIGN.md §10, conformance under faults) =="
+python -m benchmarks.attentiveness --smoke-chaos
+python -m benchmarks.attentiveness --faults
 
 echo "== docs check (README / DESIGN references, examples compile) =="
 python scripts/check_docs.py

@@ -4,6 +4,7 @@
 #   scripts/smoke.sh                    # from anywhere: the full smoke
 #   scripts/smoke.sh --smoke-pipeline   # ONLY the §7 pipeline overlap gate
 #   scripts/smoke.sh --smoke-cache      # ONLY the §8 cache-tier gate
+#   scripts/smoke.sh --smoke-chaos      # ONLY the §10 chaos soak gate
 #
 # 1. tier-1: the full pytest suite, compared against the known
 #    pre-existing failure set (scripts/known_failures.txt — jax-version
@@ -25,6 +26,12 @@
 #    fused+coalesced path — >= 5x median find-batch speedup, hit rate
 #    >= 0.9, zero exchanges on a steady-state batch, bit-exact results.
 #
+# 7. chaos soak gate (DESIGN.md §10): seeded drops + duplicates + one
+#    permanently dead owner at P=8 — every arm must stay conformant with
+#    the fault-free oracle (exactly-once under retry + dedup), no row
+#    may exhaust its retry budget, and a permanently stalled deferred
+#    queue must raise RemoteTimeout inside the retry deadline.
+#
 # scripts/ci.sh is the CI-facing gate (tier-1 + adaptive + attentiveness
 # + pipeline + docs check).
 set -euo pipefail
@@ -43,6 +50,13 @@ if [[ "${1:-}" == "--smoke-cache" ]]; then
   echo "== cache-tier gate only (DESIGN.md §8) =="
   python -m benchmarks.components --smoke-cache
   echo "smoke-cache OK"
+  exit 0
+fi
+
+if [[ "${1:-}" == "--smoke-chaos" ]]; then
+  echo "== chaos soak gate only (DESIGN.md §10) =="
+  python -m benchmarks.attentiveness --smoke-chaos
+  echo "smoke-chaos OK"
   exit 0
 fi
 
@@ -77,5 +91,8 @@ echo "== cache-tier gate (DESIGN.md §8, read-heavy find >= 5x) =="
 # runs the workload ONCE: gates speedup + hit rate + zero-exchange
 # steady state + bit-exactness, then folds its row into the JSON artifact
 python -m benchmarks.components --smoke-cache
+
+echo "== chaos soak gate (DESIGN.md §10, conformance under faults) =="
+python -m benchmarks.attentiveness --smoke-chaos
 
 echo "smoke OK"

@@ -48,9 +48,11 @@ from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import costmodel as cm
+from . import faults as flt
 from .costmodel import ARMS, ComponentCosts, DSOp
 from .types import OpStats, Promise
 
@@ -80,6 +82,11 @@ class Decision:
                                   # front-ends; the async front-ends stamp
                                   # the chooser-picked (or pipe-configured)
                                   # window count here
+    quarantined: bool = False     # the cost choice was an AM arm but the
+                                  # batch targets a quarantined owner, so
+                                  # the decision re-routed to a one-sided
+                                  # arm (DESIGN.md §10 graceful
+                                  # degradation; source == "quarantine")
 
 
 def _concrete(x) -> Optional[np.ndarray]:
@@ -202,6 +209,17 @@ class AdaptiveEngine:
         self.cache = cache
         self.hit_ewma = 0.0    # observed cache hit rate (4th online signal)
         self.write_ewma = 0.0  # observed write fraction of the op stream
+        # sixth online signal (DESIGN.md §10): per-owner fault-pressure
+        # EWMA in [0, 1] (0 = healthy), fed by the fault plane's per-owner
+        # retry/unserviced counters and by the straggler monitor bridge;
+        # owners past QUARANTINE_ON are quarantined — their AM traffic
+        # re-routes to the one-sided arms, which need no owner attention
+        self.health: Dict[int, float] = {}
+        self.quarantined: set = set()
+        # measured loss EWMA (retransmits / transmissions) — folded into
+        # OpStats.loss_rate so predict_arm prices arms under the observed
+        # fault rate (costmodel retry_penalty term)
+        self.loss_ewma = 0.0
         self.ewma: Dict[Tuple[DSOp, str], float] = {}
         # fifth online signal (DESIGN.md §9): observed per-op batch latency
         # per (op, depth) — overlays the predict_pipelined prior in
@@ -271,6 +289,92 @@ class AdaptiveEngine:
     def _observe_rw(self, is_write: bool) -> None:
         self.write_ewma += self.alpha * (float(is_write) - self.write_ewma)
 
+    # -- owner health (sixth online signal, DESIGN.md §10) ------------------
+    #: health EWMA at/above which an owner is quarantined; released once
+    #: the EWMA decays below half of it (a hysteresis band, like the arm
+    #: chooser's — flapping in and out of quarantine re-routes traffic for
+    #: no information gain)
+    QUARANTINE_ON = 0.5
+
+    def quarantine(self, rank: int, pressure: float = 1.0) -> None:
+        """Mark `rank` unhealthy (health EWMA raised to >= `pressure`);
+        at QUARANTINE_ON or above its AM traffic re-routes one-sided."""
+        self.health[rank] = max(self.health.get(rank, 0.0), float(pressure))
+        if self.health[rank] >= self.QUARANTINE_ON:
+            self.quarantined.add(rank)
+
+    def ingest_fault_stats(self, plane) -> None:
+        """Fold the fault plane's per-owner counters into the health EWMA.
+
+        Pressure per owner = (unserviced + 0.25 * retries) / rows, clamped
+        to [0, 1] — a fully dead owner scores 1.0 and, because the first
+        sample seeds the EWMA directly, is quarantined after ONE batch.
+        Also refreshes the measured loss EWMA (retransmits over total
+        transmissions) that prices arms via OpStats.loss_rate."""
+        taken = plane.take_owner_stats()
+        if not taken:
+            return
+        for r, st in taken.items():
+            rows = max(1, st["rows"])
+            pressure = min(1.0, (st["unserviced"] + 0.25 * st["retries"])
+                           / rows)
+            prev = self.health.get(r)
+            h = (pressure if prev is None
+                 else prev + self.alpha * (pressure - prev))
+            self.health[r] = h
+            if h >= self.QUARANTINE_ON:
+                self.quarantined.add(r)
+            elif h < self.QUARANTINE_ON / 2:
+                self.quarantined.discard(r)
+        rows = sum(st["rows"] for st in taken.values())
+        ret = sum(st["retries"] for st in taken.values())
+        lr = ret / max(1, rows + ret)
+        self.loss_ewma = (lr if self.loss_ewma == 0.0
+                          else self.loss_ewma
+                          + self.alpha * (lr - self.loss_ewma))
+
+    def quarantine_from_monitor(self, classes: Dict[int, str],
+                                ranks_per_host: int = 1) -> None:
+        """Bridge `runtime/straggler.StragglerMonitor.classify()` verdicts
+        into the health signal: a slow/replace/dead host marks its ranks
+        quarantined (their AM traffic re-routes to the one-sided arms,
+        which a distracted or dead host CPU cannot stall); a healthy
+        verdict decays the rank back toward release. Host h owns ranks
+        [h * ranks_per_host, (h + 1) * ranks_per_host)."""
+        severity = {"dead": 1.0, "replace": 0.9, "slow": 0.6}
+        for host, cls in classes.items():
+            for r in range(host * ranks_per_host,
+                           (host + 1) * ranks_per_host):
+                if not 0 <= r < self.nranks:
+                    continue
+                if cls in severity:
+                    self.quarantine(r, severity[cls])
+                elif r in self.health:
+                    h = (1.0 - self.alpha) * self.health[r]
+                    self.health[r] = h
+                    if h < self.QUARANTINE_ON / 2:
+                        self.quarantined.discard(r)
+
+    def _after_am(self) -> Optional[np.ndarray]:
+        """Post-execution fault bookkeeping: with a fault plane in scope,
+        ingest its per-owner pressure and return the last AM dispatch's
+        unserviced-row mask (None when everything was serviced) so the
+        wrapper can fail those rows over to the one-sided lane."""
+        plane = flt.active_plane()
+        if plane is None:
+            return None
+        uns = plane.take_unserviced()
+        self.ingest_fault_stats(plane)
+        return uns
+
+    def _fault_stats(self, s: OpStats) -> OpStats:
+        """Fold the measured loss EWMA into OpStats.loss_rate (pre-set
+        values win) so predict_arm prices arms under the observed fault
+        rate — the §10 retry term."""
+        if self.loss_ewma > 0.0 and s.loss_rate == 0.0:
+            s = replace(s, loss_rate=min(0.95, self.loss_ewma))
+        return s
+
     # -- decision -----------------------------------------------------------
     def scores(self, op: DSOp, promise: Promise,
                stats: Optional[OpStats] = None,
@@ -281,6 +385,7 @@ class AdaptiveEngine:
         overrides stats.skew for the model predictions — `decide` passes
         the host-computed batch skew this way so the OpStats fold is paid
         only on the model path."""
+        stats = self._fault_stats(stats or OpStats())
         ew = self.ewma
         out = {}
         for arm in self.arms:
@@ -411,12 +516,16 @@ class AdaptiveEngine:
 
     def decide(self, op: DSOp, promise: Promise, dst=None, valid=None,
                stats: Optional[OpStats] = None,
-               nops: Optional[int] = None) -> Decision:
+               nops: Optional[int] = None,
+               owners: Optional[Tuple[int, ...]] = None) -> Decision:
         """Choose the arm for one batch. `dst` (P, n) feeds the skew
         statistic (skipped when `stats.skew` is already set — e.g. the
         hosted queue's skew is `nranks` by construction, no device read
         needed); `stats` carries the remaining workload signals
-        (expected_probes, target_busy_us, ...)."""
+        (expected_probes, target_busy_us, ...). `owners`, when given, is
+        the static owner set the batch targets (the hosted queue passes
+        `(q.host,)`) — used for the §10 quarantine test without reading
+        `dst` off the device."""
         s = stats or OpStats()
         skew = s.skew
         # the skew statistic feeds the MODEL's owner-serialization term;
@@ -468,6 +577,36 @@ class AdaptiveEngine:
                     # and exploration stays bounded at 1/explore_every
                     # instead of locking onto the runner-up forever
                     self._seen[(op, runner)] = tick
+        # §10 graceful degradation: an AM arm needs the owner's CPU to
+        # reach a dispatch point, and a quarantined owner's won't (dead or
+        # chronically inattentive). Re-route the batch to the cheapest
+        # non-AM arm — the one-sided lane needs only the target NIC, which
+        # the fault model keeps live. `force_arm` is exempt (conformance
+        # tests pin arms on purpose); tracer batches can't be hit-tested
+        # and fall through to the AM-side unserviced failover instead.
+        quarantined_flag = False
+        if (self.quarantined and source != "forced"
+                and arm in ("am", "am_pt")):
+            if owners is not None:
+                hit = any(int(r) in self.quarantined for r in owners)
+            else:
+                d = _concrete(dst)
+                hit = False
+                if d is not None:
+                    v = _concrete(valid)
+                    flat = (d.ravel() if v is None
+                            else d[v.astype(bool)].ravel())
+                    hit = bool(np.isin(
+                        flat, np.fromiter(self.quarantined,
+                                          dtype=np.int64)).any())
+            if hit:
+                cands = [a for a in scores if a not in ("am", "am_pt")]
+                if cands:
+                    arm = min(cands,
+                              key=lambda a: (scores[a], self._ARM_RANK[a]))
+                    source = "quarantine"
+                    quarantined_flag = True
+                    self._last_arm[op] = arm
         dec = Decision(op=op, promise=promise, arm=arm, skew=skew,
                        scores=scores, source=source, batch_ops=nops,
                        dedup=dedup,
@@ -475,7 +614,8 @@ class AdaptiveEngine:
                        cached=(self.cache_reads_on()
                                and cm.arm_caches(op, promise, arm)),
                        hit_rate=s.hit_rate,
-                       depth=max(1, int(s.pipeline_depth)))
+                       depth=max(1, int(s.pipeline_depth)),
+                       quarantined=quarantined_flag)
         self.log.append(dec)
         self.last_decision = dec
         return dec
@@ -551,9 +691,31 @@ class AdaptiveEngine:
                 "ht_insert",
                 lambda e: ht_mod.build_am_handlers(ht, e,
                                                    max_probes=max_probes))
-            return self._timed(dec, lambda: ht_mod.insert_rpc(
+            ht2, ok, probes = self._timed(dec, lambda: ht_mod.insert_rpc(
                 ht, eng, keys, vals, valid=valid, decision=dec,
                 coalesce=dec.coalesce))
+            uns = self._after_am()
+            if uns is not None:
+                # §10 failover: rows whose owner never serviced the AM
+                # (dead/stalled) land via the one-sided lane — the target
+                # NIC stays live even when the host CPU is inattentive.
+                # All of a dead owner's rows move together, so per-owner
+                # apply order is preserved and the result matches the
+                # fault-free oracle.
+                m = jnp.asarray(uns)
+                rv = m if valid is None else (valid & m)
+                with win_mod.decision_scope(dec), \
+                        win_mod.cache_scope(self.cache):
+                    # coalesce rides along: duplicate keys in the subset
+                    # must collapse to ONE record, exactly as the AM
+                    # insert-or-assign handler would have applied them
+                    ht2, ok2, pr2 = ht_mod.insert_rdma(
+                        ht2, keys, vals, promise=promise, valid=rv,
+                        max_probes=max_probes, fused=True,
+                        coalesce=dec.coalesce)
+                ok = jnp.where(m, ok2, ok)
+                probes = jnp.where(m, pr2, probes)
+            return ht2, ok, probes
 
         def run():
             with win_mod.decision_scope(dec), \
@@ -562,12 +724,20 @@ class AdaptiveEngine:
                     ht, keys, vals, promise=promise, valid=valid,
                     max_probes=max_probes, fused=dec.arm == "rdma_fused",
                     coalesce=dec.coalesce)
-        return self._timed(dec, run)
+        out = self._timed(dec, run)
+        self._after_am()  # ingest wire-retry pressure from the phases
+        return out
 
     def ht_find(self, ht, keys, promise: Promise = Promise.CR,
                 valid=None, max_probes: int = 8,
-                stats: Optional[OpStats] = None):
+                stats: Optional[OpStats] = None, max_stale: int = 0):
         """Adaptive hash-table find: returns (table', found, vals).
+
+        max_stale (DESIGN.md §10): bounded-staleness tolerance for the
+        cached arm — cached records at most this many publishes behind
+        the authoritative version still count as hits (0 = bit-exact §8
+        reads). Only the cache consult is affected; wire reads are always
+        authoritative.
 
         With a cache attached and reads on (see `cache_reads_on`), the
         hit-rate EWMA is folded into the stats (OpStats.hit_rate — the
@@ -591,6 +761,19 @@ class AdaptiveEngine:
             found, vals = self._timed(dec, lambda: ht_mod.find_rpc(
                 ht, eng, keys, valid=valid, decision=dec,
                 coalesce=dec.coalesce))
+            uns = self._after_am()
+            if uns is not None:
+                # §10 failover: unserviced finds re-read one-sided (reply
+                # words of undelivered ops are garbage by contract, so the
+                # merge below overwrites exactly those rows)
+                m = jnp.asarray(uns)
+                rv = m if valid is None else (valid & m)
+                with win_mod.decision_scope(dec):
+                    _, f2, v2 = ht_mod.find_rdma(
+                        ht, keys, promise=promise, valid=rv,
+                        max_probes=max_probes, fused=True)
+                found = jnp.where(m, f2, found)
+                vals = jnp.where(m[..., None], v2, vals)
             return ht, found, vals
 
         def run():
@@ -599,8 +782,10 @@ class AdaptiveEngine:
                     ht, keys, promise=promise, valid=valid,
                     max_probes=max_probes, fused=dec.arm == "rdma_fused",
                     coalesce=dec.coalesce,
-                    cache=self.cache if dec.cached else None)
+                    cache=self.cache if dec.cached else None,
+                    max_stale=max_stale)
         out = self._timed(dec, run)
+        self._after_am()  # ingest wire-retry pressure from the phases
         if dec.cached and self.cache.last_hit_rate is not None:
             self.hit_ewma += self.alpha * (self.cache.last_hit_rate
                                            - self.hit_ewma)
@@ -616,12 +801,28 @@ class AdaptiveEngine:
         P, n, _ = vals.shape
         dec = self.decide(DSOp.Q_PUSH, promise, valid=valid,
                           stats=self._host_stats(stats),
-                          nops=P * n if valid is None else None)
+                          nops=P * n if valid is None else None,
+                          owners=(q.host,))
         if dec.arm in ("am", "am_pt"):
             eng = self._need_am(
                 "q_push", lambda e: q_mod.build_am_handlers(q, e))
-            return self._timed(dec, lambda: q_mod.push_rpc(
+            q2, ok = self._timed(dec, lambda: q_mod.push_rpc(
                 q, eng, vals, valid=valid, decision=dec))
+            uns = self._after_am()
+            if uns is not None:
+                # §10 failover: the queue is hosted on ONE rank, so a dead
+                # host leaves the whole batch unserviced and the re-run is
+                # a full one-sided push — single-host, so FIFO order is
+                # whatever the one-sided reservation hands out, exactly as
+                # in the fault-free rdma arm.
+                m = jnp.asarray(uns)
+                rv = m if valid is None else (valid & m)
+                with win_mod.decision_scope(dec):
+                    q2, ok2 = q_mod.push_rdma(
+                        q2, vals, promise=promise, valid=rv,
+                        max_cas_rounds=max_cas_rounds, planned=True)
+                ok = jnp.where(m, ok2, ok)
+            return q2, ok
 
         def run():
             with win_mod.decision_scope(dec):
@@ -630,7 +831,9 @@ class AdaptiveEngine:
                     max_cas_rounds=max_cas_rounds,
                     planned=dec.arm == "rdma_fused",
                     coalesce=dec.coalesce)
-        return self._timed(dec, run)
+        out = self._timed(dec, run)
+        self._after_am()  # ingest wire-retry pressure from the phases
+        return out
 
     def q_pop(self, q, n: int, promise: Promise = Promise.CR, valid=None,
               max_cas_rounds: int = 8, stats: Optional[OpStats] = None):
@@ -639,12 +842,26 @@ class AdaptiveEngine:
         from . import window as win_mod
         dec = self.decide(DSOp.Q_POP, promise, valid=valid,
                           stats=self._host_stats(stats),
-                          nops=q.nranks * n if valid is None else None)
+                          nops=q.nranks * n if valid is None else None,
+                          owners=(q.host,))
         if dec.arm in ("am", "am_pt"):
             eng = self._need_am(
                 "q_pop", lambda e: q_mod.build_am_handlers(q, e))
-            return self._timed(dec, lambda: q_mod.pop_rpc(
+            q2, got, pvals = self._timed(dec, lambda: q_mod.pop_rpc(
                 q, eng, n, valid=valid, decision=dec))
+            uns = self._after_am()
+            if uns is not None:
+                # §10 failover: unserviced pops never consumed anything —
+                # re-issue them one-sided against the updated queue state
+                m = jnp.asarray(uns)
+                rv = m if valid is None else (valid & m)
+                with win_mod.decision_scope(dec):
+                    q2, g2, v2 = q_mod.pop_rdma(
+                        q2, n, promise=promise, valid=rv,
+                        max_cas_rounds=max_cas_rounds, planned=True)
+                got = jnp.where(m, g2, got)
+                pvals = jnp.where(m[..., None], v2, pvals)
+            return q2, got, pvals
 
         def run():
             with win_mod.decision_scope(dec):
@@ -653,7 +870,9 @@ class AdaptiveEngine:
                     max_cas_rounds=max_cas_rounds,
                     planned=dec.arm == "rdma_fused",
                     coalesce=dec.coalesce)
-        return self._timed(dec, run)
+        out = self._timed(dec, run)
+        self._after_am()  # ingest wire-retry pressure from the phases
+        return out
 
 
 # ---------------------------------------------------------------------------

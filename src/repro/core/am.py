@@ -22,6 +22,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import faults as flt
 from . import routing
 
 Array = jax.Array
@@ -102,7 +103,21 @@ class AMEngine:
 
         Returns the number of dispatches serviced. Counted in
         `dispatch_points` whether or not anything was pending (an attentive
-        target polls on every entry)."""
+        target polls on every entry).
+
+        Under an active FaultPlan (DESIGN.md §10) each call is one AM
+        service opportunity: the plane's round clock ticks, and while the
+        plan stalls the queue (`stall_rounds` / `stall_forever` — the
+        paper's inattentive owner taken to its limit) the queue does NOT
+        drain and no dispatch point is counted (the owner never entered
+        the runtime)."""
+        plane = flt.active_plane()
+        if plane is not None:
+            stalled = plane.queue_stalled()
+            plane.tick()
+            if stalled:
+                plane.stall_hits += 1
+                return 0
         self.dispatch_points += 1
         count = len(self._pending)
         while self._pending:
@@ -152,6 +167,14 @@ class AMEngine:
         is derivable locally from `delivered`, matching the paper's
         counter-increment reply elision).
         """
+        plane = flt.active_plane()
+        if plane is not None:
+            # DESIGN.md §10, applied pre-coalescing at op-row granularity:
+            # rows to a dead/stalled owner are masked undelivered (and
+            # recorded for the adaptive layer's one-sided failover); live
+            # rows go through wire-loss retransmit + dedup simulation.
+            valid = plane.inject_am(dst, valid)
+            plane.tick()
         co = None
         eff_valid = valid
         if coalesce:

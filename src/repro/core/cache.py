@@ -159,12 +159,21 @@ class BucketCache:
         return place_np(self.nranks, self.nslots, keys)
 
     # -- read path -----------------------------------------------------------
-    def lookup(self, keys, valid=None) -> Optional[CacheLookup]:
+    def lookup(self, keys, valid=None,
+               max_stale: int = 0) -> Optional[CacheLookup]:
         """Consult the cache for one (P, n) find batch.
 
         Returns None when the cache cannot be consulted (disabled, or the
         batch is abstract under jit tracing) — callers fall through to the
-        normal engine. Stale entries discovered here are evicted."""
+        normal engine. Stale entries discovered here are evicted.
+
+        max_stale (DESIGN.md §10 graceful degradation): serve entries
+        whose probe-window version lags the authoritative version by at
+        most this many publishes. 0 (default) is the §8 bit-exact
+        behavior — any version mismatch is a miss. Under faults a reader
+        that tolerates bounded staleness keeps answering from the local
+        cache while the remote owner is quarantined; entries lagging past
+        the tolerance are still evicted."""
         if not self.enabled:
             return None
         k = _concrete(keys)
@@ -187,7 +196,8 @@ class BucketCache:
             & v[..., None]
         owner = self._owner[pp, idx]
         slot = self._slot[pp, idx]
-        fresh = self._ver[pp, idx] == self.versions[owner, slot]
+        lag = self.versions[owner, slot] - self._ver[pp, idx]
+        fresh = (lag >= 0) & (lag <= int(max_stale))
         hit_w = tag_hit_w & fresh
         stale_w = tag_hit_w & ~fresh
         if stale_w.any():

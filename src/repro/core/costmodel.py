@@ -69,6 +69,17 @@ class ComponentCosts:
                                 # fan-out crosses more lanes as the owner
                                 # count grows, scaling am_rt by
                                 # 1 + fanout_per_rank * (P - 1)
+    retry_penalty: float = 0.0  # fixed per-retransmission overhead
+                                # (DESIGN.md §10): timeout detection +
+                                # backoff + re-submit bookkeeping charged on
+                                # top of the re-sent unit's wire cost. Under
+                                # OpStats.loss_rate = lr each op expects
+                                # lr/(1-lr) retransmissions; the AM arms
+                                # re-send a whole round trip (am_rt) while
+                                # the one-sided arms re-send one phase
+                                # (0.5 * W) — the asymmetry that flips the
+                                # trade toward RDMA under loss. 0.0 keeps
+                                # every lossless prediction bit-identical.
     # Fused component phases (None -> derived: the compound descriptor rides
     # the atomic's two exchanges, so a fused op costs its atomic; the saved
     # W / R / A_fao phases are the win). calibrate() overrides with measured
@@ -386,20 +397,33 @@ def _predict_arm_flat(op: DSOp, promise: Promise, arm: str, s: OpStats,
     interpolation on top of this."""
     co = arm_coalesces(op, arm, s.dedup)
     if arm == "rdma":
-        return predict(op, promise, Backend.RDMA, s, params, fused=False)
-    if arm == "rdma_fused":
+        base = predict(op, promise, Backend.RDMA, s, params, fused=False)
+    elif arm == "rdma_fused":
         ca = s.hit_rate > 0.0 and arm_caches(op, promise, arm)
-        return predict(op, promise, Backend.RDMA, s, params, fused=True,
+        base = predict(op, promise, Backend.RDMA, s, params, fused=True,
                        coalesce=co, cached=ca)
-    if arm == "am":
-        return predict(op, promise, Backend.RPC,
+    elif arm == "am":
+        base = predict(op, promise, Backend.RPC,
                        replace(s, progress_thread=False), params,
                        coalesce=co)
-    if arm == "am_pt":
-        return predict(op, promise, Backend.RPC,
+    elif arm == "am_pt":
+        base = predict(op, promise, Backend.RPC,
                        replace(s, progress_thread=True), params,
                        coalesce=co)
-    raise ValueError(f"unknown arm {arm!r}; expected one of {ARMS}")
+    else:
+        raise ValueError(f"unknown arm {arm!r}; expected one of {ARMS}")
+    # §10 retry term: under per-attempt loss rate lr each op expects
+    # lr/(1-lr) retransmissions of its smallest retryable unit — the AM
+    # arms re-send a whole round trip, the one-sided arms one wire phase
+    # (half a put) — plus the fixed retry_penalty bookkeeping. lr = 0
+    # contributes exactly nothing, so every lossless prediction (and the
+    # pinned orderings built on them) is bit-identical to the §9 model.
+    lr = min(0.95, max(0.0, s.loss_rate))
+    if lr > 0.0:
+        retries = lr / (1.0 - lr)
+        unit = params.am_rt if arm in ("am", "am_pt") else 0.5 * params.W
+        base += retries * (params.retry_penalty + unit)
+    return base
 
 
 def overlap_split(op: DSOp, promise: Promise, arm: str,
@@ -538,7 +562,7 @@ def calibrate(measured: Dict[str, float],
 
     Keys: any of W, R, A_cas, A_fao, am_rt, handler, local, amo_apply,
     A_cas_put, A_cas_put_pub, A_fao_get, combine, cache_lookup,
-    pipe_depth_overhead.
+    pipe_depth_overhead, retry_penalty.
     """
     fields = {k: v for k, v in measured.items()
               if k in ComponentCosts.__dataclass_fields__}

@@ -230,7 +230,8 @@ def find_rdma(ht: DHashTable, keys: Array,
               promise: Promise = Promise.CR,
               valid: Optional[Array] = None, max_probes: int = 8,
               fused: bool = True, coalesce: bool = False,
-              cache=None, return_slot: bool = False):
+              cache=None, return_slot: bool = False,
+              max_stale: int = 0):
     """Batched find. Returns (table', found (P,n), vals (P,n,vw)).
 
     C_R : one bare get per probe (flag+key+val in a single R).
@@ -275,7 +276,11 @@ def find_rdma(ht: DHashTable, keys: Array,
     rec_w, nslots, vw = ht.rec_w, ht.nslots, ht.val_words
     look = None
     if cache is not None and fused and promise == Promise.CR:
-        look = cache.lookup(keys, valid)
+        # max_stale > 0 (DESIGN.md §10): bounded-staleness read — cached
+        # records at most `max_stale` publishes behind still count as
+        # hits, trading freshness for availability under quarantine.
+        # The default 0 keeps the §8 bit-exact protocol.
+        look = cache.lookup(keys, valid, max_stale=max_stale)
     if look is not None and look.all_hit:
         # every valid row served origin-locally: ZERO exchanges
         win_mod.log_cache_event("cache_hit", {

@@ -57,6 +57,7 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 
+from . import faults as flt
 from . import window as win_mod
 
 # An op stages one batch against the current structure state and returns
@@ -74,7 +75,7 @@ class Handle:
     """
 
     __slots__ = ("seq", "label", "deferred", "_pipe", "_op", "_outputs",
-                 "_staged", "_forced")
+                 "_staged", "_forced", "_error")
 
     def __init__(self, pipe: "Pipeline", seq: int, label: Optional[str],
                  deferred: bool):
@@ -86,6 +87,7 @@ class Handle:
         self._outputs: Any = None
         self._staged = False
         self._forced = False
+        self._error: Optional[BaseException] = None
 
     def done(self) -> bool:
         """True when the batch's outputs are materialized on the device.
@@ -94,7 +96,7 @@ class Handle:
         reports False, as does a staged batch whose device work is in
         flight (falls back to True-once-staged where the runtime lacks
         `is_ready`)."""
-        if self._forced:
+        if self._forced or self._error is not None:
             return True
         if not self._staged:
             return False
@@ -104,14 +106,25 @@ class Handle:
         except Exception:
             return True
 
-    def result(self) -> Any:
+    def result(self, timeout: Optional[int] = None) -> Any:
         """Force completion and return the batch's outputs.
 
         Blocks until the device work is done; drains the deferred-dispatch
         queue first if this batch (or an earlier one) is still waiting for
         a dispatch point. Idempotent — repeated calls return the same
-        values."""
-        self._pipe._force(self)
+        values.
+
+        timeout (DESIGN.md §10): under an active `faults.FaultPlan`, the
+        maximum number of simulated dispatch rounds to wait for a stalled
+        deferred-AM queue before raising `faults.RemoteTimeout` (default:
+        the plan's `RetryPolicy.deadline`) — a permanently dead owner
+        raises immediately instead of spinning. Without a plan the engine
+        cannot stall, so the value is accepted but unused. A timed-out
+        Handle stays failed: repeated `result()` re-raises the same
+        RemoteTimeout even if the owner later wakes (the classic
+        ambiguity of a timed-out RPC — the op may or may not have run;
+        here it is guaranteed dropped, see `Pipeline.close`)."""
+        self._pipe._force(self, timeout=timeout)
         return self._outputs
 
 
@@ -152,6 +165,52 @@ class Pipeline:
         self._inflight: collections.deque = collections.deque()
         self._own_queue: collections.deque = collections.deque()
         self._seq = 0
+        self._closed = False
+
+    # -- context manager (DESIGN.md §10: teardown never strands batches) ----
+    def __enter__(self) -> "Pipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            # clean exit: a full dispatch point — deferred batches drain,
+            # every handle forces; failures (RemoteTimeout on a stalled
+            # queue) propagate to the caller
+            self.flush()
+        else:
+            # exception path: best-effort teardown that never masks the
+            # in-flight exception
+            self.close()
+        return False
+
+    def close(self) -> None:
+        """Best-effort teardown: drain the deferred queue so no dispatch
+        thunk is stranded, force every stageable Handle, and fail the
+        rest with `faults.RemoteTimeout`. Errors are swallowed (this is
+        the exception path of the context manager); queued thunks of this
+        pipeline become no-ops, so a later engine drain by another user
+        cannot resurrect a batch the caller was told had failed."""
+        try:
+            self._drain_deferred()
+        except Exception:
+            pass
+        for h in list(self._inflight):
+            if h._staged:
+                try:
+                    self._force(h)
+                except Exception:
+                    pass
+            else:
+                h._error = flt.RemoteTimeout(
+                    f"pipeline closed with batch seq={h.seq} "
+                    f"({h.label or 'op'}) never serviced")
+                try:
+                    self._inflight.remove(h)
+                except ValueError:
+                    pass
+        self._closed = True
+        self._own_queue.clear()
+        self._note_inflight()
 
     def set_depth(self, depth: int) -> None:
         """Retarget the in-flight window count (the §9 auto-depth hook).
@@ -214,15 +273,18 @@ class Pipeline:
         flight while the caller stages the next one."""
         h = Handle(self, self._seq, label, deferred)
         self._seq += 1
+        if not deferred:
+            self._drain_deferred()
+            if self.pending_deferred:
+                # an inattentive owner (§10 queue stall) still holds
+                # earlier deferred batches: this submission must queue
+                # behind them — submission order IS serialization order,
+                # with or without faults
+                deferred = h.deferred = True
         if deferred:
             h._op = op
-            thunk = lambda: self._run(h, h._op)  # noqa: E731
-            if self.am_engine is not None:
-                self.am_engine.queue_dispatch(thunk)
-            else:
-                self._own_queue.append(thunk)
+            self._enqueue(h)
         else:
-            self._drain_deferred()
             self._run(h, op)
         self._inflight.append(h)
         self._note_inflight()
@@ -240,6 +302,17 @@ class Pipeline:
         return self._state
 
     # -- internals ----------------------------------------------------------
+    def _enqueue(self, h: Handle) -> None:
+        def thunk():
+            if self._closed or h._error is not None:
+                return  # failed/closed batches are guaranteed dropped
+            self._run(h, h._op)
+
+        if self.am_engine is not None:
+            self.am_engine.queue_dispatch(thunk)
+        else:
+            self._own_queue.append(thunk)
+
     def _run(self, h: Handle, op: OpFn) -> None:
         """Stage one batch: run the op against the current state inside the
         batch's slot scope (per-slot phase logs, DESIGN.md §7)."""
@@ -261,11 +334,42 @@ class Pipeline:
             while self._own_queue:
                 self._own_queue.popleft()()
 
-    def _force(self, h: Handle) -> None:
+    def _force(self, h: Handle, timeout: Optional[int] = None) -> None:
+        if h._error is not None:
+            raise h._error
         if h._forced:
             return
         if not h._staged:
             self._drain_deferred()
+        if not h._staged:
+            # DESIGN.md §10: the deferred queue refused to drain — an
+            # inattentive owner. Keep offering service opportunities
+            # (each drain attempt advances the plane's round clock) up to
+            # `timeout` simulated rounds, then fail typed instead of
+            # hanging; a permanently dead owner fails without spinning.
+            plane = flt.active_plane()
+            if plane is not None:
+                rounds = int(timeout if timeout is not None
+                             else plane.retry.deadline)
+                for _ in range(rounds):
+                    if plane.queue_dead():
+                        break
+                    self._drain_deferred()
+                    if h._staged:
+                        break
+                if not h._staged:
+                    why = ("permanently dead" if plane.queue_dead()
+                           else f"stalled past {rounds} rounds")
+                    err = flt.RemoteTimeout(
+                        f"batch seq={h.seq} ({h.label or 'op'}) not "
+                        f"serviced: deferred-AM queue {why}")
+                    h._error = err
+                    try:
+                        self._inflight.remove(h)
+                    except ValueError:
+                        pass
+                    self._note_inflight()
+                    raise err
         assert h._staged, "deferred batch did not stage at dispatch point"
         jax.block_until_ready(jax.tree_util.tree_leaves(h._outputs))
         h._forced = True

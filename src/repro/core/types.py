@@ -117,6 +117,20 @@ class OpStats:
                                      # the host lookup. Only the cached find
                                      # arm (rdma_fused under CR) consults it;
                                      # 0.0 = no cache attached.
+    loss_rate: float = 0.0           # measured per-attempt delivery-failure
+                                     # probability (DESIGN.md §10): fraction
+                                     # of transmissions the fault plane (or a
+                                     # real lossy fabric) drops, as tracked by
+                                     # AdaptiveEngine.loss_ewma. Each op pays
+                                     # an expected lr/(1-lr) retransmissions
+                                     # of its smallest retryable unit — a
+                                     # whole AM round trip for the RPC arms
+                                     # vs. one wire phase for the one-sided
+                                     # arms — so loss tilts the model toward
+                                     # RDMA (the paper's trade flips again
+                                     # under loss). 0.0 = lossless: every
+                                     # prediction is bit-identical to the
+                                     # §9 model.
     nranks: int = 0                  # shard count P the batch runs at
                                      # (DESIGN.md §9): scales the per-rank
                                      # occupancy-exchange and AM reply fan-out

@@ -39,6 +39,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import faults as flt
 from . import routing
 from .types import AmoKind
 
@@ -358,6 +359,13 @@ def _route_phase(dst: Array, payload: Array, cap: int,
         _PHASE_LOG.append((role, _CURRENT_DECISION, _phase_info(co)))
         if len(_PHASE_LOG) > PHASE_LOG_MAX:
             del _PHASE_LOG[:-PHASE_LOG_MAX]
+    plane = flt.active_plane()
+    if plane is not None:
+        # DESIGN.md §10: the fault plane simulates wire loss + origin
+        # retransmit + owner dedup INSIDE this phase; rows that never
+        # deliver are masked out of the effective valid (`valid` comes
+        # back unchanged when every row survives — the common case).
+        valid = plane.inject_phase(role, dst, valid)
     if plan is None:
         return routing.route(dst, payload, cap, valid, role=role)
     # valid=None -> active=None: reuse the plan occupancy as-is instead of

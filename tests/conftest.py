@@ -1,0 +1,20 @@
+"""Shared test harness configuration.
+
+The only fixture here keeps the CPU XLA client healthy across the full
+suite: each test module leaves its jitted executables cached, and by the
+time the suite reaches the kernel sweeps (~170 compiles in) jaxlib
+0.4.37's CPU compiler segfaults inside backend_compile — deterministic,
+order-dependent, and reproducible with ANY extra ~50 jitted tests
+inserted before tests/test_kernels.py. Dropping the compilation caches
+at module boundaries bounds the number of live executables; the cost is
+a handful of recompiles per module, the benefit is that adding new test
+files cannot knock over unrelated ones.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

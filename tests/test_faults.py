@@ -1,0 +1,676 @@
+"""Fault-injection plane (DESIGN.md §10): deterministic chaos schedules,
+exactly-once delivery, typed timeouts, and graceful degradation.
+
+The §10 contract under test:
+
+  * conformance by construction — for EVERY seeded fault schedule,
+    idempotent ops under retry + dedup produce results bit-identical to
+    the fault-free oracle on every arm (one-sided, fused, AM, auto,
+    cached, pipelined): serialization order is fixed by the routing plan,
+    so exactly-once delivery is sufficient;
+  * determinism — the same FaultPlan seed reproduces the same drops,
+    duplicates, and retry counts, run after run;
+  * liveness — `Handle.result(timeout=)` on a permanently dead owner
+    raises `faults.RemoteTimeout` instead of hanging, and a temporarily
+    stalled owner recovers within its stall budget;
+  * degradation — dead/inattentive owners are quarantined by the health
+    signal (fault-plane pressure or the straggler-monitor bridge) and
+    their AM traffic re-routes to the one-sided arms; bounded-staleness
+    cache reads keep answering within `max_stale` publishes.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import adaptive as ad_mod
+from repro.core import am as am_mod
+from repro.core import cache as cache_mod
+from repro.core import costmodel as cm
+from repro.core import faults as flt
+from repro.core import hashtable as ht_mod
+from repro.core import pipeline as pl_mod
+from repro.core import queue as q_mod
+from repro.core.costmodel import DSOp
+from repro.core.types import OpStats, Promise
+from repro.runtime import elastic
+from repro.runtime.straggler import StragglerMonitor
+
+P = 4
+VW = 2
+NSLOTS = 128
+
+
+def _val_of(keys):
+    return jnp.concatenate([((keys * 31 + 7) & 0x7FFFFF)[..., None],
+                            ((keys * 17 + 3) & 0x7FFFFF)[..., None]],
+                           axis=-1).astype(jnp.int32)
+
+
+def _batches(seed, nbatches, n=8, lo=1, hi=4000):
+    """Insert streams draw globally DISTINCT keys: the one-sided insert
+    is insert-only over distinct keys per batch (hashtable.insert_rdma's
+    documented domain), while the AM handler is insert-or-assign — a
+    cross-origin duplicate key is the one input where the two arms agree
+    only on visible results, not raw slot bits. Bit-exact oracle compares
+    therefore stay on the shared domain; duplicate-key batches get their
+    own visible-conformance test below."""
+    rng = np.random.default_rng(seed)
+    flat = rng.choice(np.arange(lo, hi), size=nbatches * P * n,
+                      replace=False)
+    return [jnp.asarray(flat[i * P * n:(i + 1) * P * n].reshape(P, n),
+                        jnp.int32) for i in range(nbatches)]
+
+
+# Three seeded chaos schedules (the acceptance criterion's >= 3): heavy
+# drops, heavy duplicates (lost acks), and a mixed schedule with delayed
+# rows and one temporarily dead owner.
+def _schedules():
+    return [
+        ("drops", 1001, dict(seed=101, drop_rate=0.30)),
+        ("dups", 2002, dict(seed=202, dup_rate=0.40)),
+        ("mixed", 3003, dict(seed=303, drop_rate=0.15, dup_rate=0.15,
+                             delay_rate=0.20, delay_rounds=2,
+                             dead_owners={1: 3})),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Determinism primitives
+# ---------------------------------------------------------------------------
+class TestRetryPolicy:
+    def test_capped_exponential_backoff(self):
+        rp = flt.RetryPolicy(max_attempts=8, base_delay=1.0, max_delay=16.0)
+        assert rp.delay(1) == 1.0
+        assert rp.delay(2) == 2.0
+        assert rp.delay(4) == 8.0
+        assert rp.delay(7) == 16.0  # capped
+
+    def test_defaults(self):
+        rp = flt.RetryPolicy()
+        assert rp.max_attempts >= 1 and rp.deadline >= 1
+
+
+class TestDedupIndex:
+    def test_seqs_contiguous_per_channel(self):
+        d = flt.DedupIndex(P)
+        dst = np.array([[1, 1, 2], [2, 2, 2], [0, 1, 2], [3, 3, 3]])
+        active = np.ones_like(dst, bool)
+        seqs = d.assign(dst, active)
+        # channel (owner=1 <- origin=0) got seqs 0, 1
+        assert sorted(seqs[0, :2].tolist()) == [0, 1]
+        # channel (owner=2 <- origin=1) got 0, 1, 2
+        assert sorted(seqs[1].tolist()) == [0, 1, 2]
+        seqs2 = d.assign(dst, active)
+        assert sorted(seqs2[1].tolist()) == [3, 4, 5]
+
+    def test_admit_filters_redelivery(self):
+        d = flt.DedupIndex(P)
+        assert d.admit(1, 0, 0) is True
+        assert d.admit(1, 0, 0) is False   # duplicate delivery
+        assert d.admit(1, 0, 1) is True
+        assert d.dup_filtered == 1
+
+    def test_watermark_advances_over_reordered_tags(self):
+        d = flt.DedupIndex(P)
+        assert d.admit(2, 0, 1) is True    # out of order
+        assert d.admit(2, 0, 0) is True    # fills the gap
+        assert d.watermark[2, 0] == 1      # contiguous run absorbed
+        assert not d.out_of_order.get((2, 0))
+        assert d.admit(2, 0, 1) is False   # below watermark now
+
+
+class TestDeterminism:
+    def test_same_seed_same_schedule(self):
+        keys = _batches(7, 1)[0]
+        vals = _val_of(keys)
+        stats = []
+        for _ in range(2):
+            ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+            plan = flt.FaultPlan(P, seed=42, drop_rate=0.25, dup_rate=0.25)
+            plan.reset()
+            with flt.fault_scope(plan):
+                ht_mod.insert_rdma(ht, keys, vals)
+            stats.append(plan.stats())
+        assert stats[0] == stats[1]
+        assert stats[0]["dropped"] > 0
+
+    def test_different_seed_different_schedule(self):
+        keys = _batches(7, 1)[0]
+        vals = _val_of(keys)
+        out = []
+        for seed in (1, 2):
+            ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+            plan = flt.FaultPlan(P, seed=seed, drop_rate=0.25)
+            plan.reset()
+            with flt.fault_scope(plan):
+                ht_mod.insert_rdma(ht, keys, vals)
+            out.append(plan.stats()["dropped"])
+        assert out[0] != out[1]
+
+
+# ---------------------------------------------------------------------------
+# Chaos conformance: every schedule x every arm == the fault-free oracle
+# ---------------------------------------------------------------------------
+class _ArmRunner:
+    """Run a mixed insert/find stream on one arm, optionally under a
+    FaultPlan; the fault-free instance IS the oracle (arm conformance
+    across arms is pinned by tests/test_conformance.py)."""
+
+    def __init__(self, arm):
+        self.arm = arm
+        self.ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        self.eng = am_mod.AMEngine(P)
+        self.auto = ad_mod.AdaptiveEngine(P, am_engine=self.eng,
+                                          policy="round_robin")
+        if arm == "cached":
+            self.auto.policy = "cost"
+            self.auto.force_arm = "rdma_fused"
+            self.auto.attach_cache(cache_mod.BucketCache(
+                P, NSLOTS, VW, capacity=256, max_probes=8))
+        elif arm != "auto":
+            self.auto.policy = "cost"
+            self.auto.force_arm = arm
+
+    def insert(self, keys):
+        self.ht, ok, _ = self.auto.ht_insert(self.ht, keys, _val_of(keys))
+        return np.asarray(ok)
+
+    def find(self, keys):
+        self.ht, found, vals = self.auto.ht_find(self.ht, keys)
+        return np.asarray(found), np.asarray(vals)
+
+
+@pytest.mark.parametrize("arm", ["rdma", "rdma_fused", "am", "auto",
+                                 "cached"])
+@pytest.mark.parametrize("name,kseed,cfg", _schedules())
+def test_chaos_conformance(arm, name, kseed, cfg):
+    batches = _batches(seed=kseed, nbatches=4)
+    oracle = _ArmRunner(arm)
+    chaos = _ArmRunner(arm)
+    plan = flt.FaultPlan(P, **cfg)
+    plan.reset()
+    for i, keys in enumerate(batches):
+        ok_o = oracle.insert(keys)
+        f_o, v_o = oracle.find(keys)
+        with flt.fault_scope(plan):
+            ok_c = chaos.insert(keys)
+            f_c, v_c = chaos.find(keys)
+        assert np.array_equal(ok_o, ok_c), (arm, name, i, "ok")
+        assert np.array_equal(f_o, f_c), (arm, name, i, "found")
+        assert np.array_equal(v_o, v_c), (arm, name, i, "vals")
+    if arm == "auto":
+        # the §10 quarantine re-route may legitimately execute a batch on
+        # a different (conformant) arm than the fault-free run, so the
+        # raw slot layout can differ — final-state conformance is the
+        # visible contract: every key reads back identically
+        for keys in batches:
+            f_o, v_o = oracle.find(keys)
+            f_c, v_c = chaos.find(keys)
+            assert np.array_equal(f_o, f_c), (arm, name, "final-found")
+            assert np.array_equal(v_o, v_c), (arm, name, "final-vals")
+    else:
+        assert np.array_equal(np.asarray(oracle.ht.win.data),
+                              np.asarray(chaos.ht.win.data)), (arm, name)
+    s = plan.stats()
+    assert s["dropped"] + s["dup_filtered"] + s["stall_hits"] > 0 \
+        or plan.dead_owners, (name, s)
+
+
+def test_chaos_duplicate_keys_visible_conformance():
+    """Cross-origin duplicate keys under a dead owner: the AM oracle's
+    insert-or-assign and the one-sided failover differ in raw slot bits
+    (a sender-side coalescer cannot merge rows from two origins), but
+    every visible read is identical — the §10 contract on the full input
+    domain."""
+    rng = np.random.default_rng(17)
+    keys = jnp.asarray(rng.integers(1, 40, size=(P, 8)), jnp.int32)  # dense
+    oracle = _ArmRunner("am")
+    chaos = _ArmRunner("am")
+    plan = flt.FaultPlan(P, seed=19, drop_rate=0.2, dup_rate=0.2,
+                         dead_owners={1: None})
+    plan.reset()
+    ok_o = oracle.insert(keys)
+    f_o, v_o = oracle.find(keys)
+    with flt.fault_scope(plan):
+        ok_c = chaos.insert(keys)
+        f_c, v_c = chaos.find(keys)
+    assert np.array_equal(ok_o, ok_c)
+    assert np.array_equal(f_o, f_c)
+    assert np.array_equal(v_o, v_c)
+
+
+@pytest.mark.parametrize("arm", ["rdma", "am", "auto"])
+def test_chaos_conformance_queue(arm):
+    rng = np.random.default_rng(9)
+    vals = [jnp.asarray(rng.integers(0, 99, size=(P, 4, VW)), jnp.int32)
+            for _ in range(3)]
+
+    def run(plan):
+        q = q_mod.make_queue(P, host=1, capacity=256, val_words=VW)
+        eng = am_mod.AMEngine(P)
+        auto = ad_mod.AdaptiveEngine(P, am_engine=eng)
+        if arm != "auto":
+            auto.force_arm = arm
+        out = []
+        for v in vals:
+            if plan is None:
+                q, ok = auto.q_push(q, v)
+                q, got, pv = auto.q_pop(q, 4)
+            else:
+                with flt.fault_scope(plan):
+                    q, ok = auto.q_push(q, v)
+                    q, got, pv = auto.q_pop(q, 4)
+            out.append((np.asarray(ok), np.asarray(got), np.asarray(pv)))
+        return q, out
+
+    q_o, out_o = run(None)
+    plan = flt.FaultPlan(P, seed=77, drop_rate=0.25, dup_rate=0.25)
+    plan.reset()
+    q_c, out_c = run(plan)
+    for (a, b, c), (x, y, z) in zip(out_o, out_c):
+        assert np.array_equal(a, x)
+        assert np.array_equal(b, y)
+        assert np.array_equal(c, z)
+    assert np.array_equal(np.asarray(q_o.win.data),
+                          np.asarray(q_c.win.data))
+
+
+def test_chaos_conformance_pipelined():
+    """The pipelined engine under wire faults + a briefly stalled queue:
+    deferred AM batches wait out the stall, results stay bit-exact."""
+    batches = _batches(5, 4)
+
+    def run(plan):
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        eng = am_mod.AMEngine(P)
+        outs = []
+
+        def step(keys):
+            def op(st):
+                st2, ok, pr = ht_mod.insert_rdma(st, keys, _val_of(keys))
+                return st2, (ok, pr)
+            return op
+
+        def go():
+            with pl_mod.Pipeline(ht, depth=2, am_engine=eng) as pipe:
+                hs = [pipe.submit(step(k), deferred=(i % 2 == 1),
+                                  label=f"b{i}")
+                      for i, k in enumerate(batches)]
+                for h in hs:
+                    ok, _ = h.result(timeout=32)
+                    outs.append(np.asarray(ok))
+                return pipe.flush()
+
+        if plan is None:
+            return go(), outs
+        with flt.fault_scope(plan):
+            return go(), outs
+
+    ht_o, outs_o = run(None)
+    plan = flt.FaultPlan(P, seed=11, drop_rate=0.2, dup_rate=0.2,
+                         stall_rounds=2)
+    plan.reset()
+    ht_c, outs_c = run(plan)
+    for a, b in zip(outs_o, outs_c):
+        assert np.array_equal(a, b)
+    assert np.array_equal(np.asarray(ht_o.win.data),
+                          np.asarray(ht_c.win.data))
+
+
+# ---------------------------------------------------------------------------
+# Timeouts and liveness
+# ---------------------------------------------------------------------------
+class TestTimeout:
+    def _pipe(self, plan):
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        keys = _batches(3, 1)[0]
+
+        def op(st):
+            st2, ok, pr = ht_mod.insert_rdma(st, keys, _val_of(keys))
+            return st2, (ok, pr)
+
+        eng = am_mod.AMEngine(P)
+        return pl_mod.Pipeline(ht, depth=4, am_engine=eng), op
+
+    def test_dead_owner_raises_remote_timeout(self):
+        plan = flt.FaultPlan(P, seed=1, stall_forever=True)
+        plan.reset()
+        with flt.fault_scope(plan):
+            pipe, op = self._pipe(plan)
+            h = pipe.submit(op, deferred=True, label="ins")
+            with pytest.raises(flt.RemoteTimeout):
+                h.result(timeout=8)
+            # the failure is sticky: the batch is guaranteed dropped
+            with pytest.raises(flt.RemoteTimeout):
+                h.result()
+            assert h.done()
+
+    def test_timeout_is_typed_timeout_error(self):
+        assert issubclass(flt.RemoteTimeout, TimeoutError)
+
+    def test_slow_owner_recovers_within_deadline(self):
+        plan = flt.FaultPlan(P, seed=2, stall_rounds=3)
+        plan.reset()
+        with flt.fault_scope(plan):
+            pipe, op = self._pipe(plan)
+            h = pipe.submit(op, deferred=True, label="ins")
+            ok, _ = h.result(timeout=16)
+        assert plan.stall_hits == 3
+        assert np.asarray(ok).all()
+
+    def test_deadline_default_from_retry_policy(self):
+        plan = flt.FaultPlan(P, seed=3, stall_forever=True,
+                             retry=flt.RetryPolicy(deadline=4))
+        plan.reset()
+        with flt.fault_scope(plan):
+            pipe, op = self._pipe(plan)
+            h = pipe.submit(op, deferred=True)
+            with pytest.raises(flt.RemoteTimeout):
+                h.result()  # no explicit timeout: plan deadline applies
+
+
+class TestPipelineContextManager:
+    def test_clean_exit_flushes(self):
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        keys = _batches(4, 1)[0]
+        eng = am_mod.AMEngine(P)
+
+        def op(st):
+            st2, ok, pr = ht_mod.insert_rdma(st, keys, _val_of(keys))
+            return st2, (ok, pr)
+
+        with pl_mod.Pipeline(ht, depth=4, am_engine=eng) as pipe:
+            h = pipe.submit(op, deferred=True)
+        assert h.done()
+        assert eng.pending_dispatches == 0
+        ht1, _, _ = ht_mod.insert_rdma(ht, keys, _val_of(keys))
+        assert np.array_equal(np.asarray(pipe.staged_state.win.data),
+                              np.asarray(ht1.win.data))
+
+    def test_exception_path_fails_outstanding_handles(self):
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        keys = _batches(4, 1)[0]
+        eng = am_mod.AMEngine(P)
+        plan = flt.FaultPlan(P, seed=5, stall_forever=True)
+        plan.reset()
+        with pytest.raises(RuntimeError, match="boom"):
+            with flt.fault_scope(plan):
+                with pl_mod.Pipeline(ht, depth=4, am_engine=eng) as pipe:
+                    h = pipe.submit(
+                        lambda st: ht_mod.insert_rdma(
+                            st, keys, _val_of(keys))[:1] + ((),),
+                        deferred=True)
+                    raise RuntimeError("boom")
+        # the stranded batch is failed, not silently lost...
+        with pytest.raises(flt.RemoteTimeout):
+            h.result()
+        # ...and its queued thunk is a no-op for later engine users
+        eng.drain_dispatch_queue()
+        assert eng.pending_dispatches == 0
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: quarantine, straggler bridge, bounded staleness
+# ---------------------------------------------------------------------------
+class TestQuarantine:
+    def test_dead_owner_quarantined_after_one_batch(self):
+        keys = _batches(6, 1)[0]
+        eng = am_mod.AMEngine(P)
+        auto = ad_mod.AdaptiveEngine(P, am_engine=eng)
+        auto.force_arm = "am"
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        oracle, ok_o, _ = ad_mod.AdaptiveEngine(
+            P, am_engine=am_mod.AMEngine(P)).ht_insert(
+                ht, keys, _val_of(keys))
+        plan = flt.FaultPlan(P, seed=8, dead_owners={2: None})
+        plan.reset()
+        with flt.fault_scope(plan):
+            ht2, ok_c, _ = auto.ht_insert(ht, keys, _val_of(keys))
+        assert 2 in auto.quarantined
+        assert auto.health[2] == 1.0
+        # failover kept the batch conformant despite the dead owner
+        assert np.array_equal(np.asarray(ok_o), np.asarray(ok_c))
+        assert np.array_equal(np.asarray(oracle.win.data),
+                              np.asarray(ht2.win.data))
+
+    def test_decision_reroutes_off_quarantined_owner(self):
+        auto = ad_mod.AdaptiveEngine(P, am_engine=am_mod.AMEngine(P))
+        auto.quarantine(2)
+        dst = jnp.full((P, 8), 2, jnp.int32)
+        # bias the model so an AM arm would win outright
+        auto.ewma[(DSOp.HT_INSERT, "am")] = 0.1
+        auto.ewma[(DSOp.HT_INSERT, "am_pt")] = 0.2
+        dec = auto.decide(DSOp.HT_INSERT, Promise.CRW, dst=dst)
+        assert dec.arm not in ("am", "am_pt")
+        assert dec.source == "quarantine"
+        assert dec.quarantined
+
+    def test_untargeted_batches_keep_am(self):
+        auto = ad_mod.AdaptiveEngine(P, am_engine=am_mod.AMEngine(P))
+        auto.quarantine(2)
+        auto.ewma[(DSOp.HT_INSERT, "am")] = 0.1
+        dst = jnp.zeros((P, 8), jnp.int32)  # rank 0 only: not quarantined
+        dec = auto.decide(DSOp.HT_INSERT, Promise.CRW, dst=dst)
+        assert not dec.quarantined
+
+    def test_owner_hint_used_for_hosted_queue(self):
+        auto = ad_mod.AdaptiveEngine(P, am_engine=am_mod.AMEngine(P))
+        auto.quarantine(1)
+        auto.ewma[(DSOp.Q_PUSH, "am")] = 0.1
+        dec = auto.decide(DSOp.Q_PUSH, Promise.CRW, owners=(1,))
+        assert dec.quarantined and dec.arm not in ("am", "am_pt")
+
+    def test_release_hysteresis(self):
+        auto = ad_mod.AdaptiveEngine(P, am_engine=am_mod.AMEngine(P),
+                                     alpha=0.5)
+        auto.quarantine(3)
+        assert 3 in auto.quarantined
+        # healthy verdicts decay the EWMA; release only below ON/2
+        for _ in range(10):
+            auto.quarantine_from_monitor({3: "healthy"})
+        assert 3 not in auto.quarantined
+        assert auto.health[3] < auto.QUARANTINE_ON / 2
+
+
+class TestStragglerBridge:
+    def test_classify_verdicts_feed_quarantine(self):
+        mon = StragglerMonitor(n_hosts=P, threshold=2.0, patience=2,
+                               dead_after=3)
+        base = 0.1
+        for step in range(4):
+            for h in range(P):
+                if h == 2:
+                    continue  # host 2 stops heartbeating -> dead
+                mon.heartbeat(h, step, base * (8.0 if h == 1 else 1.0))
+        classes = mon.classify()
+        assert classes[2] == "dead"
+        assert classes[1] in ("slow", "replace")
+        auto = ad_mod.AdaptiveEngine(P, am_engine=am_mod.AMEngine(P))
+        auto.quarantine_from_monitor(classes)
+        assert 2 in auto.quarantined          # dead host quarantined
+        assert 1 in auto.quarantined          # chronic straggler too
+        assert 0 not in auto.quarantined and 3 not in auto.quarantined
+
+    def test_ranks_per_host_expansion(self):
+        auto = ad_mod.AdaptiveEngine(4, am_engine=am_mod.AMEngine(4))
+        auto.quarantine_from_monitor({1: "dead"}, ranks_per_host=2)
+        assert auto.quarantined == {2, 3}
+
+
+class TestBoundedStaleness:
+    def _cached(self):
+        eng = ad_mod.AdaptiveEngine(P)
+        eng.attach_cache(cache_mod.BucketCache(P, NSLOTS, VW, capacity=256,
+                                               max_probes=8))
+        return eng
+
+    def test_max_stale_serves_lagging_entries(self):
+        keys = _batches(12, 1, n=4)[0]
+        c = cache_mod.BucketCache(P, NSLOTS, VW, capacity=256, max_probes=8)
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        ht, _, _ = ht_mod.insert_rdma(ht, keys, _val_of(keys))
+        ht, f, v = ht_mod.find_rdma(ht, keys, cache=c)      # fill
+        look = c.lookup(keys)
+        assert look is not None and look.all_hit
+        # one invalidation round: overlapping probe windows may bump a
+        # bucket several times, so tolerate the max observed lag
+        c.on_insert_keys(keys, None, 8)
+        assert c.lookup(keys, max_stale=16).all_hit         # tolerated
+        strict = c.lookup(keys, max_stale=0)                # strict: stale
+        assert strict is None or not strict.hit.any()       # ...and evicted
+
+    def test_stale_past_tolerance_evicted(self):
+        keys = _batches(13, 1, n=4)[0]
+        c = cache_mod.BucketCache(P, NSLOTS, VW, capacity=256, max_probes=8)
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        ht, _, _ = ht_mod.insert_rdma(ht, keys, _val_of(keys))
+        ht, _, _ = ht_mod.find_rdma(ht, keys, cache=c)
+        for _ in range(3):
+            c.on_insert_keys(keys, None, 8)                 # lag >= 3
+        look = c.lookup(keys, max_stale=1)
+        assert look is None or not look.hit.any()
+        assert c.counters["stale_evicted"] > 0
+
+    def test_ht_find_threads_max_stale(self):
+        keys = _batches(14, 1, n=4)[0]
+        eng = self._cached()
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        ht, _, _ = eng.ht_insert(ht, keys, _val_of(keys))
+        eng.force_arm = "rdma_fused"
+        ht, f0, v0 = eng.ht_find(ht, keys)                  # fills cache
+        eng.cache.on_insert_keys(keys, None, 8)             # age entries
+        ht, f1, v1 = eng.ht_find(ht, keys, max_stale=1)
+        assert np.array_equal(np.asarray(f0), np.asarray(f1))
+        assert np.array_equal(np.asarray(v0), np.asarray(v1))
+
+
+# ---------------------------------------------------------------------------
+# Cost model: retry/loss terms
+# ---------------------------------------------------------------------------
+class TestCostRetryTerms:
+    def test_lossless_predictions_bit_identical(self):
+        for op, pr in ((DSOp.HT_INSERT, Promise.CRW),
+                       (DSOp.HT_FIND, Promise.CR),
+                       (DSOp.Q_PUSH, Promise.CRW)):
+            for arm in cm.ARMS:
+                a = cm.predict_arm(op, pr, arm, OpStats())
+                b = cm.predict_arm(op, pr, arm, OpStats(loss_rate=0.0))
+                assert a == b, (op, arm)
+
+    def test_loss_charges_am_more_than_rdma(self):
+        s = OpStats(loss_rate=0.3)
+        for op, pr in ((DSOp.HT_FIND, Promise.CR),
+                       (DSOp.HT_INSERT, Promise.CRW)):
+            d_am = (cm.predict_arm(op, pr, "am", s)
+                    - cm.predict_arm(op, pr, "am", OpStats()))
+            d_rd = (cm.predict_arm(op, pr, "rdma", s)
+                    - cm.predict_arm(op, pr, "rdma", OpStats()))
+            assert d_am > d_rd > 0.0, (op, d_am, d_rd)
+
+    def test_trade_flips_toward_rdma_under_loss(self):
+        # a parameter point where AM wins lossless (huge one-sided W, fast
+        # AM round trip) loses once the per-attempt loss prices each AM
+        # retry at a full round trip
+        params = cm.ComponentCosts(W=6.0, R=6.0, A_cas=6.0, A_fao=6.0,
+                                   am_rt=5.0, handler=0.05,
+                                   retry_penalty=1.0, name="flip")
+        op, pr = DSOp.HT_FIND, Promise.CR
+        lossless = {a: cm.predict_arm(op, pr, a, OpStats(), params)
+                    for a in ("am", "rdma")}
+        assert lossless["am"] < lossless["rdma"]
+        lossy = {a: cm.predict_arm(op, pr, a, OpStats(loss_rate=0.6),
+                                   params)
+                 for a in ("am", "rdma")}
+        assert lossy["rdma"] < lossy["am"]
+
+    def test_calibrate_accepts_retry_penalty(self):
+        p = cm.calibrate({"retry_penalty": 2.5})
+        assert p.retry_penalty == 2.5
+
+    def test_loss_ewma_feeds_scores(self):
+        auto = ad_mod.AdaptiveEngine(P, am_engine=am_mod.AMEngine(P))
+        s0, _ = auto.scores(DSOp.HT_FIND, Promise.CR)
+        auto.loss_ewma = 0.4
+        s1, _ = auto.scores(DSOp.HT_FIND, Promise.CR)
+        assert s1["am"] > s0["am"]
+        # pre-set loss_rate wins over the EWMA
+        s2, _ = auto.scores(DSOp.HT_FIND, Promise.CR,
+                            OpStats(loss_rate=0.1))
+        assert s2["am"] < s1["am"]
+
+
+# ---------------------------------------------------------------------------
+# Elastic rehash under faults (satellite: runtime/elastic.rehash_table)
+# ---------------------------------------------------------------------------
+class TestElasticRehash:
+    def _filled(self, nkeys=48, seed=21):
+        rng = np.random.default_rng(seed)
+        keys_np = rng.choice(np.arange(1, 5000), size=nkeys, replace=False)
+        keys = jnp.asarray(keys_np.reshape(P, -1), jnp.int32)
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        ht, ok, _ = ht_mod.insert_rdma(ht, keys, _val_of(keys))
+        assert np.asarray(ok).all()
+        return ht, keys
+
+    def _assert_all_found(self, ht, keys):
+        kq = jnp.asarray(np.asarray(keys).reshape(ht.nranks, -1), jnp.int32)
+        ht, found, vals = ht_mod.find_rdma(ht, kq)
+        assert np.asarray(found).all()
+        assert np.array_equal(np.asarray(vals), np.asarray(_val_of(kq)))
+
+    def test_grow_round_trip(self):
+        ht, keys = self._filled()
+        big = elastic.rehash_table(ht, 8)
+        assert big.nranks == 8
+        self._assert_all_found(big, keys)
+
+    def test_shrink_round_trip(self):
+        ht, keys = self._filled()
+        big = elastic.rehash_table(ht, 8)
+        small = elastic.rehash_table(big, 4)
+        self._assert_all_found(small, keys)
+        # shrink back equals a direct rehash at 4: same insert order per
+        # placement, so the record bits agree wherever both are live
+        direct = elastic.rehash_table(ht, 4)
+        s_live = np.asarray(small.win.data) != 0
+        d_live = np.asarray(direct.win.data) != 0
+        assert np.array_equal(s_live.sum(), d_live.sum())
+
+    def test_empty_table(self):
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        new = elastic.rehash_table(ht, 8)
+        recs = np.asarray(new.win.data).reshape(8, new.nslots, new.rec_w)
+        assert ((recs[..., 0] & 255) != 2).all()  # nothing live
+
+    def test_duplicate_keys_preserved(self):
+        """Duplicate keys sit outside insert_rdma's distinct-key domain
+        (insert-only + per-origin coalescing: cross-origin duplicates
+        each claim a slot), so the rehash invariant is conservation, not
+        collapse: the drain+reinsert never multiplies records, and
+        reads stay visibly correct."""
+        keys = jnp.asarray(np.full((P, 8), 123), jnp.int32)
+        ht = ht_mod.make_hashtable(P, NSLOTS, VW)
+        ht, _, _ = ht_mod.insert_rdma(ht, keys, _val_of(keys))
+        recs0 = np.asarray(ht.win.data).reshape(P, ht.nslots, ht.rec_w)
+        n_old = int(((recs0[..., 0] & 255) == 2).sum())
+        new = elastic.rehash_table(ht, 8)
+        recs = np.asarray(new.win.data).reshape(8, new.nslots, new.rec_w)
+        live = (recs[..., 0] & 255) == 2
+        assert 1 <= live.sum() <= n_old
+        self._assert_all_found(new, jnp.asarray(np.full((8, 1), 123),
+                                                jnp.int32))
+
+    def test_kill_then_rehash_conformant_reads(self):
+        """An injected dead owner does not perturb the rehash: drain +
+        reinsert are one-sided phases, which owner faults never touch."""
+        ht, keys = self._filled()
+        plan = flt.FaultPlan(P, seed=31, dead_owners={3: None},
+                             drop_rate=0.2)
+        plan.reset()
+        with flt.fault_scope(plan):
+            new = elastic.rehash_table(ht, 8)
+            self._assert_all_found(new, keys)
+        clean = elastic.rehash_table(ht, 8)
+        assert np.array_equal(np.asarray(new.win.data),
+                              np.asarray(clean.win.data))
